@@ -1,0 +1,49 @@
+"""Benchmark: UE-to-edge association (paper Fig. 5) + timing of Alg. 3."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import assoc, delay
+from repro.core.problem import HFLProblem
+
+SEEDS = range(10)
+
+
+def run(csv_rows: list):
+    print("\n[Fig 5] edges  proposed  refined   greedy    random    (mean "
+          "max-latency over 10 seeds, 100 UEs, a=10)")
+    for m in (2, 3, 4, 5, 6, 8, 10, 12):
+        vals = {}
+        times = {}
+        for name in ("proposed", "refined", "greedy", "random"):
+            lat, ts = [], []
+            for seed in SEEDS:
+                p = HFLProblem(num_edges=m, num_ues=100, epsilon=0.25,
+                               seed=seed)
+                t0 = time.perf_counter()
+                A = assoc.STRATEGIES[name](p, seed=seed)
+                ts.append(time.perf_counter() - t0)
+                lat.append(delay.association_latency(p, A, a=10))
+            vals[name] = float(np.mean(lat))
+            times[name] = float(np.mean(ts)) * 1e6
+        print(f"      {m:5d} {vals['proposed']:9.3f} {vals['refined']:9.3f} "
+              f"{vals['greedy']:9.3f} {vals['random']:9.3f}")
+        for name in vals:
+            csv_rows.append(("fig5", f"m={m};{name}", times[name],
+                             f"latency={vals[name]:.4f}"))
+    # Ranking property over all seeds/M (paper's qualitative claim):
+    wins_g = wins_r = n = 0
+    for m in (2, 4, 6, 8, 10):
+        for seed in SEEDS:
+            p = HFLProblem(num_edges=m, num_ues=100, seed=seed)
+            lp = delay.association_latency(p, assoc.refined(p, a=10), 10)
+            lg = delay.association_latency(p, assoc.greedy(p), 10)
+            lr = delay.association_latency(p, assoc.random_assoc(p, seed), 10)
+            wins_g += lp <= lg + 1e-9
+            wins_r += lp <= lr + 1e-9
+            n += 1
+    print(f"      refined <= greedy in {wins_g}/{n}, <= random in {wins_r}/{n}")
+    csv_rows.append(("fig5", "ranking", 0.0,
+                     f"beats_greedy={wins_g}/{n};beats_random={wins_r}/{n}"))

@@ -1,0 +1,51 @@
+"""Benchmark: time-to-accuracy under optimal vs suboptimal (a,b)
+(paper Figs. 4 and 6) — LeNet on synthetic MNIST, Alg. 1 simulation."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.lenet_mnist import LeNetConfig
+from repro.core import delay, schedule
+from repro.core.problem import HFLProblem
+from repro.data import partition, synthetic
+from repro.fl.sim import HFLSimulator
+from repro.models import lenet
+
+
+def run(csv_rows: list):
+    prob = HFLProblem(num_edges=2, num_ues=10, epsilon=0.25, seed=0)
+    sch_opt = schedule.plan(prob)
+    train, test = synthetic.synthetic_mnist(seed=0, n_train=1000, n_test=300)
+    rng = np.random.default_rng(0)
+    parts = partition.dirichlet_partition(rng, train["labels"], 10, alpha=1.0)
+    ue_data = [{k: train[k][ix] for k in train} for ix in parts]
+    init = lenet.lenet_init(jax.random.PRNGKey(1), LeNetConfig())
+
+    target = 0.97
+    print(f"\n[Fig 4/6] time to reach test acc {target} (simulated seconds)")
+    variants = [(sch_opt.a, sch_opt.b, "optimal"),
+                (max(1, sch_opt.a // 4), sch_opt.b * 4, "a/4,b*4"),
+                (sch_opt.a * 4, max(1, sch_opt.b // 2), "a*4,b/2"),
+                (1, 1, "a=1,b=1")]
+    for a, b, tag in variants:
+        R = max(1, int(np.ceil(float(delay.cloud_rounds(
+            a, b, epsilon=prob.epsilon, zeta=prob.zeta, gamma=prob.gamma,
+            big_c=prob.big_c)))))
+        sch = dataclasses.replace(
+            sch_opt, a=a, b=b, rounds=R,
+            cloud_round_time=delay.cloud_round_time(prob, sch_opt.assoc, a, b))
+        sim = HFLSimulator(sch, lenet.lenet_loss, init, ue_data, lr=0.05,
+                           samples_per_ue=32)
+        t0 = time.perf_counter()
+        res = sim.run(test, rounds=min(R, 6))
+        wall = time.perf_counter() - t0
+        hit = np.argmax(res.test_acc >= target) if (res.test_acc >= target).any() else -1
+        t_hit = res.times[hit] if hit >= 0 else float("inf")
+        print(f"      a={a:3d} b={b:2d} [{tag:9s}] t(acc>={target})="
+              f"{t_hit:8.1f}s  final={res.test_acc[-1]:.3f}  wall={wall:5.1f}s")
+        csv_rows.append(("fig46", tag, wall * 1e6,
+                         f"t_hit={t_hit:.1f};final_acc={res.test_acc[-1]:.3f}"))

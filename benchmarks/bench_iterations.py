@@ -1,0 +1,41 @@
+"""Benchmark: optimal iteration counts (paper Figs. 2 and 3).
+
+Full-scale sweeps over eps and UEs/edge; CSV rows name,derived metrics.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import assoc, iteropt
+from repro.core.problem import HFLProblem
+
+BACKHAUL = dict(backhaul_rate_lo=1e6, backhaul_rate_hi=5e6)
+
+
+def run(csv_rows: list):
+    # Fig. 2: eps sweep, 5 edges x 20 UEs each
+    prob = HFLProblem(num_edges=5, num_ues=100, seed=0, **BACKHAUL)
+    A = assoc.proposed(prob)
+    print("\n[Fig 2] eps     a*   b*    a*b        R    total[s]   solve[ms]")
+    for eps in (0.5, 0.4, 0.3, 0.25, 0.2, 0.15, 0.1, 0.05, 0.02, 0.01):
+        prob.epsilon = eps
+        t0 = time.perf_counter()
+        s = iteropt.solve_direct(prob, A)
+        dt = (time.perf_counter() - t0) * 1e3
+        print(f"      {eps:5.2f} {s.a_int:4d} {s.b_int:4d} "
+              f"{s.a_int*s.b_int:6d} {s.rounds:8.1f} {s.total:10.2f} {dt:10.1f}")
+        csv_rows.append(("fig2", f"eps={eps}", dt * 1e3,
+                         f"a={s.a_int};b={s.b_int};total={s.total:.2f}"))
+
+    # Fig. 3: UEs-per-edge sweep at eps=0.25
+    print("\n[Fig 3] ues/edge   a*   b*   total[s]")
+    for ues in (10, 20, 40, 60, 80, 100):
+        p = HFLProblem(num_edges=5, num_ues=5 * ues, epsilon=0.25, seed=1,
+                       **BACKHAUL)
+        A2 = assoc.proposed(p)
+        s = iteropt.solve_direct(p, A2)
+        print(f"      {ues:8d} {s.a_int:4d} {s.b_int:4d} {s.total:10.2f}")
+        csv_rows.append(("fig3", f"ues={ues}", 0.0,
+                         f"a={s.a_int};b={s.b_int};total={s.total:.2f}"))

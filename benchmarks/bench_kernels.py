@@ -1,0 +1,62 @@
+"""Benchmark: Pallas kernels vs jnp oracles — correctness + CPU timing.
+
+Timing here is interpret-mode (CPU) so it measures the oracle-vs-wrapper
+overhead, not TPU speed; the TPU numbers come from the dry-run roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv_rows: list):
+    rng = np.random.default_rng(0)
+    print("\n[kernels] case                          max|err|   us/call(ref)")
+    # attention
+    for (B, S, H, K, hd, w) in [(2, 256, 8, 4, 64, 0), (1, 512, 8, 8, 64, 128)]:
+        q = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(0, 1, (B, S, K, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(0, 1, (B, S, K, hd)), jnp.float32)
+        o = ops.flash_attention(q, k, v, causal=True, window=w)
+        r = ref.flash_attention_ref(q, k, v, causal=True, window=w)
+        err = float(jnp.max(jnp.abs(o - r)))
+        us = _time(lambda *a: ref.flash_attention_ref(*a, causal=True,
+                                                      window=w), q, k, v)
+        name = f"attn B{B}S{S}H{H}K{K}hd{hd}w{w}"
+        print(f"      {name:32s} {err:9.2e} {us:12.0f}")
+        csv_rows.append(("kernels", name, us, f"err={err:.2e}"))
+    # rglru
+    for (B, S, D) in [(2, 512, 256), (1, 2048, 128)]:
+        a = jnp.asarray(rng.uniform(0.8, 0.999, (B, S, D)), jnp.float32)
+        b = jnp.asarray(rng.normal(0, 1, (B, S, D)), jnp.float32)
+        h = ops.rglru_scan(a, b)
+        r = ref.rglru_scan_ref(a, b)
+        err = float(jnp.max(jnp.abs(h - r)))
+        us = _time(ref.rglru_scan_ref, a, b)
+        name = f"rglru B{B}S{S}D{D}"
+        print(f"      {name:32s} {err:9.2e} {us:12.0f}")
+        csv_rows.append(("kernels", name, us, f"err={err:.2e}"))
+    # aggregate
+    for (N, F) in [(32, 65536), (512, 4096)]:
+        x = jnp.asarray(rng.normal(0, 1, (N, F)), jnp.float32)
+        w = jnp.asarray(rng.uniform(1, 10, N), jnp.float32)
+        o = ops.hier_aggregate(x, w)
+        r = ref.hier_aggregate_ref(x, w)
+        err = float(jnp.max(jnp.abs(o - r)))
+        us = _time(ref.hier_aggregate_ref, x, w)
+        name = f"agg N{N}F{F}"
+        print(f"      {name:32s} {err:9.2e} {us:12.0f}")
+        csv_rows.append(("kernels", name, us, f"err={err:.2e}"))

@@ -1,0 +1,56 @@
+"""Benchmark: roofline table from the recorded dry-run artifacts.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+prints the per-(arch x shape) three-term roofline with the dominant
+bottleneck — EXPERIMENTS.md §Roofline is generated from this.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(pattern="*_sp_default.json"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(RESULT_DIR, pattern))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run(csv_rows: list):
+    recs = load_records()
+    if not recs:
+        print("\n[roofline] no dry-run records — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all` first")
+        return
+    print(f"\n[roofline] {len(recs)} single-pod records "
+          "(seconds/step per chip; * = dominant)")
+    hdr = (f"      {'arch':22s} {'shape':12s} {'compute':>10s} "
+           f"{'memory':>10s} {'collective':>11s} {'useful%':>8s} {'fits':>5s}")
+    print(hdr)
+    for r in recs:
+        if r.get("status") != "ok":
+            print(f"      {r['arch']:22s} {r['shape']:12s} -- {r['status']}: "
+                  f"{r.get('reason', r.get('error', ''))[:60]}")
+            continue
+        rl = r["roofline"]
+        dom = rl["dominant"]
+        def mark(k, v):
+            return f"{v:10.4f}*" if dom == k else f"{v:10.4f} "
+        useful = rl.get("useful_flops_ratio")
+        useful_s = f"{useful*100:7.1f}%" if useful else "    n/a"
+        temp = (r["memory"].get("temp_bytes") or 0) / 2**30
+        args = (r["memory"].get("argument_bytes") or 0) / 2**30
+        fits = "Y" if (temp + args) <= 16.0 else "N"
+        print(f"      {r['arch']:22s} {r['shape']:12s} "
+              f"{mark('compute_s', rl['compute_s'])}"
+              f"{mark('memory_s', rl['memory_s'])}"
+              f"{mark('collective_s', rl['collective_s'])} {useful_s} {fits:>4s}")
+        csv_rows.append(("roofline", f"{r['arch']};{r['shape']}",
+                         rl["step_time_lower_bound_s"] * 1e6,
+                         f"dominant={dom};useful={useful}"))

@@ -1,0 +1,55 @@
+"""Serving throughput on CPU smoke configs: prefill latency + ms/token
+decode for one representative arch per family (dense / MoE / hybrid /
+ssm / enc-dec).  CPU numbers are for regression tracking; TPU projections
+come from the decode_32k roofline records."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.synthetic import TokenStream
+from repro.launch.steps import make_serve_step
+from repro.models import build_model
+
+ARCHS = ("stablelm-1.6b", "mixtral-8x7b", "recurrentgemma-9b",
+         "xlstm-125m", "whisper-base")
+
+
+def run(csv_rows: list):
+    print("\n[serving] arch                 prefill ms   ms/token (B=4, "
+          "prompt=48, +12 tok, smoke cfg)")
+    for arch in ARCHS:
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        stream = TokenStream(cfg.vocab_size, seed=0)
+        B, S = 4, 48
+        toks = jnp.asarray(stream.batch(B, S)["tokens"])
+        if cfg.encoder_decoder:
+            rng = np.random.default_rng(0)
+            batch = {"frames": jnp.asarray(rng.normal(0, 1, (B, S, cfg.d_model)),
+                                           jnp.float32),
+                     "tokens": toks[:, : S // cfg.decoder_len_ratio]}
+        else:
+            batch = {"tokens": toks}
+        prefill = jax.jit(model.prefill)
+        logits, state = prefill(params, batch)          # compile
+        t0 = time.perf_counter()
+        logits, state = jax.block_until_ready(prefill(params, batch))
+        t_prefill = (time.perf_counter() - t0) * 1e3
+        step = jax.jit(make_serve_step(model))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        tok, state = step(params, state, tok)            # compile
+        t0 = time.perf_counter()
+        for _ in range(12):
+            tok, state = step(params, state, tok)
+        jax.block_until_ready(tok)
+        ms_tok = (time.perf_counter() - t0) / 12 * 1e3
+        assert np.isfinite(np.asarray(tok)).all()
+        print(f"      {arch:22s} {t_prefill:9.1f}   {ms_tok:9.2f}")
+        csv_rows.append(("serving", arch, ms_tok * 1e3,
+                         f"prefill_ms={t_prefill:.1f}"))

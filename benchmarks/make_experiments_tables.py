@@ -1,0 +1,99 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+experiments/dryrun/*.json.
+
+  PYTHONPATH=src python benchmarks/make_experiments_tables.py [--mp]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "n/a"
+    return f"{b/2**30:.2f}"
+
+
+def load(suffix):
+    recs = {}
+    for f in sorted(glob.glob(os.path.join(DIR, f"*_{suffix}.json"))):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def dryrun_table(recs, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | status | compile s | args GiB/dev | temp GiB/dev "
+          "| HLO GFLOP/dev | coll GB/dev | coll ops |")
+    print("|---|---|---|---:|---:|---:|---:|---:|---:|")
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:48]
+            print(f"| {arch} | {shape} | {r['status']}: {reason} | | | | | | |")
+            continue
+        m, c = r["memory"], r["collectives"]
+        print(f"| {arch} | {shape} | ok | {r['compile_s']:.1f} | "
+              f"{fmt_bytes(m['argument_bytes'])} | {fmt_bytes(m['temp_bytes'])} | "
+              f"{(c.get('hlo_flops') or 0)/1e9:,.0f} | "
+              f"{(c.get('total') or 0)/1e9:.2f} | {c.get('ops', 0)} |")
+
+
+def roofline_table(recs):
+    print("\n### Roofline (single-pod, per chip, seconds/step; * = dominant)\n")
+    print("| arch | shape | compute | memory [lo,hi] | collective | dominant "
+          "| MODEL_FLOPs/HLO_FLOPs | fix |")
+    print("|---|---|---:|---:|---:|---|---:|---|")
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        d = rl["dominant"]
+        def m(k, v, fmt="{:.4f}"):
+            s = fmt.format(v)
+            return f"**{s}**" if d == k else s
+        mem = (f"{m('memory_s', rl['memory_s'])} "
+               f"[{rl.get('memory_s_lower', 0):.4f}, "
+               f"{rl.get('memory_s_upper', 0):.4f}]")
+        u = rl.get("useful_flops_ratio")
+        fix = FIXES.get((arch, shape)) or FIXES.get((d, shape.split("_")[0])) \
+            or FIXES.get(d, "")
+        print(f"| {arch} | {shape} | {m('compute_s', rl['compute_s'])} | {mem} | "
+              f"{m('collective_s', rl['collective_s'])} | {d.replace('_s','')} | "
+              f"{(u or 0):.2f} | {fix} |")
+
+
+FIXES = {
+    "compute_s": "raise per-chip batch or cut remat recompute",
+    "memory_s": "shard/shrink the dominant resident tensor (activations or KV)",
+    ("memory_s", "decode"): "shard the KV cache seq dim over TP (kv_seq_sharded, §Perf bonus)",
+    "collective_s": "reduce TP all-reduce volume or overlap with compute",
+    ("collective_s", "train"): "trade TP activation all-reduces for ZeRO-3 weight gathers (pure_fsdp, §Perf)",
+    ("collective_s", "prefill"): "shard-local MoE dispatch / fewer per-layer gathers (§Perf)",
+    ("collective_s", "decode"): "kv_seq_sharded softmax-stats psum is already minimal",
+    ("xlstm-125m", "prefill_32k"): "chunkwise-parallel mLSTM (impl=chunked, §Perf)",
+    ("recurrentgemma-9b", "train_4k"): "chunked two-level RG-LRU scan (impl=chunked)",
+    ("mistral-large-123b", "train_4k"): "pure_fsdp: 58.8 -> 30.8 s (§Perf)",
+    ("mixtral-8x7b", "prefill_32k"): "shard_map MoE dispatch: 20.7 -> 3.3 s (§Perf)",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mp", action="store_true", help="multi-pod tables")
+    args = ap.parse_args()
+    sp = load("sp_default")
+    dryrun_table(sp, "Single-pod (16x16 = 256 chips)")
+    if args.mp:
+        mp = load("mp_default")
+        dryrun_table(mp, "Multi-pod (2x16x16 = 512 chips)")
+    roofline_table(sp)
+
+
+if __name__ == "__main__":
+    main()

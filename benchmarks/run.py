@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,fig5,...]
+
+Prints human tables and writes benchmarks/results.csv with
+``name,us_per_call,derived`` rows.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import (bench_ablation, bench_association, bench_convergence,
+                        bench_iterations, bench_kernels, bench_optimizer,
+                        bench_roofline, bench_serving)
+
+SUITES = {
+    "iterations": bench_iterations.run,     # Figs. 2-3
+    "association": bench_association.run,   # Fig. 5
+    "optimizer": bench_optimizer.run,       # Alg. 2 vs direct
+    "convergence": bench_convergence.run,   # Figs. 4/6
+    "kernels": bench_kernels.run,
+    "roofline": bench_roofline.run,         # EXPERIMENTS.md §Roofline
+    "ablation": bench_ablation.run,         # beyond-paper ablations
+    "serving": bench_serving.run,           # decode throughput (smoke)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite names (default: all)")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+    rows: list = []
+    for name, fn in SUITES.items():
+        if only and name not in only:
+            continue
+        print(f"\n===== {name} =====")
+        fn(rows)
+    out = os.path.join(os.path.dirname(__file__), "results.csv")
+    with open(out, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["suite", "name", "us_per_call", "derived"])
+        w.writerows(rows)
+    print(f"\nwrote {len(rows)} rows to {out}")
+
+
+if __name__ == "__main__":
+    main()

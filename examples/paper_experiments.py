@@ -1,0 +1,101 @@
+"""Reproduce the paper's §V figures (reduced scale for CPU).
+
+Fig. 2 — optimal (a, b, a*b) vs global accuracy eps.
+Fig. 3 — optimal (a, b) vs number of UEs per edge.
+Fig. 5 — max latency vs number of edge servers, three association schemes.
+Figs. 4/6 — time-to-accuracy under optimal (a*, b*) vs suboptimal pairs.
+
+Run:  PYTHONPATH=src python examples/paper_experiments.py
+(Full-scale versions live in benchmarks/ — this is the readable demo.)
+"""
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import assoc, delay, iteropt, schedule
+from repro.core.problem import HFLProblem
+from repro.data import partition, synthetic
+from repro.fl.sim import HFLSimulator
+from repro.models import lenet
+
+
+def fig2():
+    print("== Fig. 2: iterations vs global accuracy eps ==")
+    # WAN-speed backhaul (1-5 Mbit/s) puts the system in the regime where
+    # edge aggregation pays off (b > 1), as in the paper's figures.
+    prob = HFLProblem(num_edges=5, num_ues=100, seed=0,
+                      backhaul_rate_lo=1e6, backhaul_rate_hi=5e6)
+    A = assoc.proposed(prob)
+    print(f"{'eps':>6} {'a*':>5} {'b*':>5} {'a*b':>6} {'R':>7} {'total[s]':>9}")
+    for eps in (0.5, 0.4, 0.3, 0.2, 0.1, 0.05):
+        prob.epsilon = eps
+        s = iteropt.solve_direct(prob, A)
+        print(f"{eps:6.2f} {s.a_int:5d} {s.b_int:5d} {s.a_int*s.b_int:6d} "
+              f"{s.rounds:7.1f} {s.total:9.2f}")
+
+
+def fig3():
+    print("\n== Fig. 3: iterations vs number of UEs per edge ==")
+    print(f"{'UEs':>5} {'a*':>5} {'b*':>5} {'total[s]':>9}")
+    for ues in (10, 20, 40, 60, 80, 100):
+        prob = HFLProblem(num_edges=5, num_ues=5 * ues, epsilon=0.25, seed=1,
+                          backhaul_rate_lo=1e6, backhaul_rate_hi=5e6)
+        A = assoc.proposed(prob)
+        s = iteropt.solve_direct(prob, A)
+        print(f"{ues:5d} {s.a_int:5d} {s.b_int:5d} {s.total:9.2f}")
+
+
+def fig5():
+    print("\n== Fig. 5: association latency vs number of edges ==")
+    print(f"{'edges':>6} {'proposed':>9} {'refined':>9} {'greedy':>9} {'random':>9}")
+    for m in (2, 4, 6, 8, 10):
+        vals = {}
+        for name in ("proposed", "refined", "greedy", "random"):
+            lat = []
+            for seed in range(5):
+                prob = HFLProblem(num_edges=m, num_ues=100, epsilon=0.25,
+                                  seed=seed)
+                A = assoc.STRATEGIES[name](prob, seed=seed)
+                lat.append(delay.association_latency(prob, A, a=10))
+            vals[name] = np.mean(lat)
+        print(f"{m:6d} {vals['proposed']:9.3f} {vals['refined']:9.3f} "
+              f"{vals['greedy']:9.3f} {vals['random']:9.3f}")
+
+
+def fig46():
+    print("\n== Figs. 4/6: time-to-accuracy, optimal vs suboptimal (a,b) ==")
+    prob = HFLProblem(num_edges=2, num_ues=8, epsilon=0.25, seed=0)
+    sch_opt = schedule.plan(prob)
+    train, test = synthetic.synthetic_mnist(seed=0, n_train=800, n_test=300)
+    rng = np.random.default_rng(0)
+    parts = partition.dirichlet_partition(rng, train["labels"], 8, alpha=1.0)
+    ue_data = [{k: train[k][ix] for k in train} for ix in parts]
+    init = lenet.lenet_init(jax.random.PRNGKey(1), __import__(
+        "repro.configs.lenet_mnist", fromlist=["LeNetConfig"]).LeNetConfig())
+
+    import dataclasses
+    for (a, b, tag) in [(sch_opt.a, sch_opt.b, "optimal"),
+                        (max(1, sch_opt.a // 4), sch_opt.b * 4, "a/4 b*4"),
+                        (sch_opt.a * 4, max(1, sch_opt.b // 2), "a*4")]:
+        sch = dataclasses.replace(
+            sch_opt, a=a, b=b,
+            cloud_round_time=delay.cloud_round_time(prob, sch_opt.assoc, a, b),
+            rounds=max(1, int(np.ceil(float(delay.cloud_rounds(
+                a, b, epsilon=prob.epsilon, zeta=prob.zeta,
+                gamma=prob.gamma, big_c=prob.big_c))))))
+        sim = HFLSimulator(sch, lenet.lenet_loss, init, ue_data, lr=0.05,
+                           samples_per_ue=32)
+        res = sim.run(test, rounds=min(sch.rounds, 2))
+        tt = " ".join(f"({t:6.1f}s,{acc:.2f})" for t, acc in
+                      list(zip(res.times, res.test_acc))[:4])
+        print(f"  a={a:3d} b={b:2d} [{tag:8s}]  {tt}", flush=True)
+
+
+if __name__ == "__main__":
+    fig2()
+    fig3()
+    fig5()
+    fig46()

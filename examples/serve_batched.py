@@ -1,0 +1,45 @@
+"""Batched serving demo: prefill + KV-cache greedy decode for three
+architecture families (dense GQA, sliding-window MoE, recurrent).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.synthetic import TokenStream
+from repro.launch.steps import make_serve_step
+from repro.models import build_model
+
+
+def demo(arch: str, batch: int = 4, prompt: int = 48, gen: int = 16):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stream = TokenStream(cfg.vocab_size, seed=0)
+    tokens = jnp.asarray(stream.batch(batch, prompt)["tokens"])
+
+    logits, state = jax.jit(model.prefill)(params, {"tokens": tokens})
+    step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    outs = [tok]
+    t0 = time.time()
+    for _ in range(gen - 1):
+        tok, state = step(params, state, tok)
+        outs.append(tok)
+    dt = (time.time() - t0) / (gen - 1) * 1e3
+    seq = np.asarray(jnp.concatenate(outs, 1))
+    assert np.isfinite(seq).all()
+    print(f"{arch:22s} B={batch} prompt={prompt} +{gen} tok "
+          f"{dt:7.1f} ms/tok   sample: {seq[0, :8]}")
+
+
+if __name__ == "__main__":
+    for arch in ("stablelm-1.6b", "mixtral-8x7b", "recurrentgemma-9b"):
+        demo(arch)

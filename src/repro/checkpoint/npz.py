@@ -1,0 +1,119 @@
+"""Checkpointing: pytree <-> npz with sharding-aware host gather.
+
+Flat key encoding: path segments joined with '/'; list indices appear as
+'[i]'.  Restoring rebuilds the exact tree structure from the keys, then
+(optionally) re-places leaves onto a target sharding tree.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(f"{prefix}/{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(f"{prefix}[{i}]", v)
+        elif node is None:
+            flat[prefix + "#none"] = np.zeros((), np.int8)
+        else:
+            flat[prefix] = np.asarray(jax.device_get(node))
+
+    rec("", tree)
+    return flat
+
+
+def save_pytree(path: str, tree, metadata: Optional[dict] = None) -> None:
+    flat = _flatten(tree)
+    if metadata:
+        for k, v in metadata.items():
+            flat[f"__meta__/{k}"] = np.asarray(v)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+
+
+_IDX = re.compile(r"^(.*)\[(\d+)\]$")
+
+
+def _insert(root, key: str, value):
+    """Insert value at the '/'-and-'[i]' encoded path."""
+    parts = key.split("/")
+    node, parent, pk = root, None, None
+
+    def ensure(container, k, nxt):
+        if isinstance(container, dict):
+            if k not in container:
+                container[k] = nxt
+            return container[k]
+        while len(container) <= k:
+            container.append(None)
+        if container[k] is None:
+            container[k] = nxt
+        return container[k]
+
+    cur = root
+    for i, part in enumerate(parts):
+        last = i == len(parts) - 1
+        steps = []
+        m, rest = None, part
+        while (m := _IDX.match(rest)):
+            rest, idx = m.group(1), int(m.group(2))
+            steps.append(idx)
+        steps = steps[::-1]
+        # rest is the dict key (may be '' if pure index chain)
+        chain = ([("d", rest)] if rest else []) + [("l", s) for s in steps]
+        for j, (kind, k) in enumerate(chain):
+            leaf_here = last and j == len(chain) - 1
+            if leaf_here:
+                if kind == "d":
+                    cur[k] = value
+                else:
+                    while len(cur) <= k:
+                        cur.append(None)
+                    cur[k] = value
+            else:
+                nxt_kind = chain[j + 1][0] if j + 1 < len(chain) else \
+                    ("l" if _IDX.match(parts[i + 1]) and not parts[i + 1][0].isalpha() else "d")
+                nxt = [] if nxt_kind == "l" else {}
+                cur = ensure(cur, k, nxt)
+    return root
+
+
+def load_pytree(path: str, target: Any = None):
+    """Load an npz checkpoint.  If ``target`` (a pytree of arrays or
+    ShapeDtypeStructs with .sharding) is given, leaves are device_put onto
+    the matching shardings and the tree structure is taken from target."""
+    p = path if path.endswith(".npz") else path + ".npz"
+    data = np.load(p)
+    flat = {k: data[k] for k in data.files if not k.startswith("__meta__/")}
+    meta = {k[len("__meta__/"):]: data[k] for k in data.files
+            if k.startswith("__meta__/")}
+
+    if target is not None:
+        leaves, treedef = jax.tree.flatten(target)
+        keys = sorted(flat)
+        assert len(keys) == len(leaves), (len(keys), len(leaves))
+        new = []
+        for k, tgt in zip(keys, leaves):
+            arr = flat[k]
+            sh = getattr(tgt, "sharding", None)
+            new.append(jax.device_put(arr, sh) if sh is not None else arr)
+        return jax.tree.unflatten(treedef, new), meta
+
+    root: dict = {}
+    for k, v in sorted(flat.items()):
+        if k.endswith("#none"):
+            _insert(root, k[:-5], None)
+        else:
+            _insert(root, k, v)
+    return root, meta

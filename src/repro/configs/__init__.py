@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    all_pairs,
+    get_config,
+    shape_applicable,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "all_pairs",
+    "get_config",
+    "shape_applicable",
+]

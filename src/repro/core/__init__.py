@@ -1,0 +1,12 @@
+"""The paper's contribution: hierarchical-FL time minimization.
+
+* ``problem``  — HFLProblem: wireless/compute topology (§III, §V-A).
+* ``delay``    — delay model eqs. (1)-(8) and objective (13)/(15).
+* ``iteropt``  — sub-problem I: optimal (a, b); Alg. 2 dual + direct solver.
+* ``assoc``    — sub-problem II: Alg. 3 association + baselines.
+* ``schedule`` — HFLSchedule + TPU roofline bridge (hardware adaptation).
+"""
+from repro.core.problem import HFLProblem
+from repro.core.schedule import HFLSchedule, plan, plan_from_roofline
+
+__all__ = ["HFLProblem", "HFLSchedule", "plan", "plan_from_roofline"]

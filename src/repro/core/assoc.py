@@ -1,0 +1,237 @@
+"""Sub-problem II — UE-to-edge association (§IV-D).
+
+Four strategies, all returning an (N, M) 0/1 matrix with exactly one 1 per
+row and at most ``capacity`` UEs per edge:
+
+* ``proposed``   — Algorithm 3: per-edge top-SNR selection with conflict
+  resolution by the best unassigned (UE, edge) SNR.
+* ``greedy``     — baseline from §V-C: each edge greedily takes the max-SNR
+  UEs still available, in edge order.
+* ``random_assoc`` — baseline from §V-C: uniform random under capacity.
+* ``exhaustive`` — exact MILP solution of problem (39) by enumeration
+  (tiny instances only; the branch-and-bound ground truth for tests).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Optional
+
+import numpy as np
+
+from repro.core import delay
+from repro.core.problem import HFLProblem
+
+
+def capacity_of(problem: HFLProblem) -> int:
+    """Max UEs per edge from the bandwidth constraint (39d): B / B_n."""
+    cap = int(problem.bandwidth_total // problem.ue_bandwidth)
+    # Feasibility: the M edges must be able to host all N UEs.
+    need = int(np.ceil(problem.num_ues / problem.num_edges))
+    return max(cap, need)
+
+
+def _assert_valid(problem, assoc, cap):
+    assert assoc.shape == (problem.num_ues, problem.num_edges)
+    assert (assoc.sum(1) == 1).all(), "each UE must have exactly one edge"
+    assert (assoc.sum(0) <= cap).all(), "edge capacity exceeded"
+
+
+def random_assoc(problem: HFLProblem, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    N, M = problem.num_ues, problem.num_edges
+    cap = capacity_of(problem)
+    assoc = np.zeros((N, M), dtype=np.int64)
+    counts = np.zeros(M, dtype=np.int64)
+    for n in rng.permutation(N):
+        open_edges = np.flatnonzero(counts < cap)
+        m = rng.choice(open_edges)
+        assoc[n, m] = 1
+        counts[m] += 1
+    _assert_valid(problem, assoc, cap)
+    return assoc
+
+
+def greedy(problem: HFLProblem) -> np.ndarray:
+    """Each edge (in order) takes the highest-SNR still-unassigned UEs."""
+    N, M = problem.num_ues, problem.num_edges
+    cap = capacity_of(problem)
+    snr = problem.snr()                                  # (N, M)
+    assoc = np.zeros((N, M), dtype=np.int64)
+    unassigned = set(range(N))
+    for m in range(M):
+        if not unassigned:
+            break
+        cands = sorted(unassigned, key=lambda n: -snr[n, m])
+        take = cands[:cap]
+        # Leave room so the remaining edges can host the remaining UEs.
+        remaining_cap = (M - m - 1) * cap
+        while len(unassigned) - len(take) > remaining_cap:
+            take.append(cands[len(take)])
+        for n in take:
+            assoc[n, m] = 1
+            unassigned.discard(n)
+    # Any stragglers (cap rounding): best-SNR open edge.
+    counts = assoc.sum(0)
+    for n in list(unassigned):
+        open_edges = np.flatnonzero(counts < cap)
+        m = open_edges[np.argmax(snr[n, open_edges])]
+        assoc[n, m] = 1
+        counts[m] += 1
+    _assert_valid(problem, assoc, cap)
+    return assoc
+
+
+def proposed(problem: HFLProblem) -> np.ndarray:
+    """Algorithm 3 — time-minimized UE-to-edge association.
+
+    Each edge i independently claims its top-capacity SNR UEs; a UE claimed
+    by edges j < i is resolved by swapping in the best unclaimed (UE, edge)
+    pair among {m_i, m_j} (lines 4-8 of Alg. 3), iterating until claims are
+    disjoint.  Unclaimed UEs are then attached to their best open edge.
+    """
+    N, M = problem.num_ues, problem.num_edges
+    cap = capacity_of(problem)
+    snr = problem.snr()
+    # claimed[m] = set of UEs edge m wants.
+    claimed = [set(np.argsort(-snr[:, m])[:min(cap, N)].tolist())
+               for m in range(M)]
+
+    def unclaimed():
+        taken = set().union(*claimed)
+        return np.array(sorted(set(range(N)) - taken), dtype=int)
+
+    for i in range(M):
+        # resolve conflicts of edge i against all earlier edges j < i.
+        # Swapping in a GLOBALLY unclaimed UE guarantees termination: each
+        # swap strictly shrinks the unclaimed pool, each drop strictly
+        # shrinks the duplicate count.
+        progress = True
+        while progress:
+            progress = False
+            for j in range(i):
+                both = claimed[i] & claimed[j]
+                if not both:
+                    continue
+                n_conf = min(both)
+                pool = unclaimed()
+                if pool.size == 0:
+                    # nothing to swap in: keep the stronger claim (line 5's
+                    # argmax degenerates to the conflicted UE itself)
+                    if snr[n_conf, i] >= snr[n_conf, j]:
+                        claimed[j].discard(n_conf)
+                    else:
+                        claimed[i].discard(n_conf)
+                    progress = True
+                    continue
+                pair_snr = snr[pool][:, [i, j]]          # (|pool|, 2)
+                flat = int(np.argmax(pair_snr))
+                n_new = int(pool[flat // 2])
+                m_new = (i, j)[flat % 2]
+                # remove the conflicted UE from m_new's claim, add n_new there
+                claimed[m_new].discard(n_conf)
+                claimed[m_new].add(n_new)
+                progress = True
+
+    assoc = np.zeros((N, M), dtype=np.int64)
+    counts = np.zeros(M, dtype=np.int64)
+    owner = {}
+    for m in range(M):
+        for n in claimed[m]:
+            if n in owner:                  # defensive: keep higher SNR
+                if snr[n, m] <= snr[n, owner[n]]:
+                    continue
+                assoc[n, owner[n]] = 0
+                counts[owner[n]] -= 1
+            if counts[m] < cap:
+                assoc[n, m] = 1
+                counts[m] += 1
+                owner[n] = m
+    for n in range(N):
+        if assoc[n].sum() == 0:
+            open_edges = np.flatnonzero(counts < cap)
+            m = open_edges[np.argmax(snr[n, open_edges])]
+            assoc[n, m] = 1
+            counts[m] += 1
+    _assert_valid(problem, assoc, cap)
+    return assoc
+
+
+def exhaustive(problem: HFLProblem, a: float = 1.0) -> np.ndarray:
+    """Exact solution of problem (38)/(39) by enumeration — tiny N, M only."""
+    N, M = problem.num_ues, problem.num_edges
+    if M**N > 2_000_000:
+        raise ValueError(f"exhaustive infeasible for M^N = {M}^{N}")
+    cap = capacity_of(problem)
+    best, best_val = None, np.inf
+    for choice in itertools.product(range(M), repeat=N):
+        counts = np.bincount(choice, minlength=M)
+        if (counts > cap).any():
+            continue
+        assoc = np.zeros((N, M), dtype=np.int64)
+        assoc[np.arange(N), list(choice)] = 1
+        v = delay.association_latency(problem, assoc, a)
+        if v < best_val:
+            best, best_val = assoc, v
+    return best
+
+
+def refined(problem: HFLProblem, a: float = 10.0,
+            max_moves: int = 500) -> np.ndarray:
+    """BEYOND-PAPER: Alg. 3 + bottleneck local search.
+
+    Alg. 3 maximizes selected SNR, which is a proxy for the true objective
+    (38).  This post-pass descends the objective directly: repeatedly take
+    the bottleneck UE (the argmax of a*t_cmp + t_com) and move it to the
+    edge that minimizes the resulting SYSTEM latency (bandwidth re-splits
+    included), until no move improves.  Each accepted move strictly lowers
+    max-latency, so it terminates.  Reported separately in EXPERIMENTS.md
+    §Perf (paper-faithful Alg. 3 is the baseline).
+    """
+    cap = capacity_of(problem)
+    assoc = proposed(problem)
+    cur = delay.association_latency(problem, assoc, a)
+    t_cmp = problem.t_cmp()
+    N = problem.num_ues
+    for _ in range(max_moves):
+        per_ue = np.asarray(a) * t_cmp + problem.t_com(assoc)
+        order = np.argsort(-per_ue)
+        improved = False
+        for n in order[:10]:                      # top-10 bottleneck UEs
+            m_cur = int(assoc[n].argmax())
+            best_val, best_trial = cur, None
+            # single move to an edge with spare capacity
+            for m in range(problem.num_edges):
+                if m == m_cur or assoc[:, m].sum() >= cap:
+                    continue
+                trial = assoc.copy()
+                trial[n, m_cur], trial[n, m] = 0, 1
+                v = delay.association_latency(problem, trial, a)
+                if v < best_val - 1e-12:
+                    best_val, best_trial = v, trial
+            # swap with a UE on another edge (escapes capacity-tight minima)
+            for n2 in range(N):
+                m2 = int(assoc[n2].argmax())
+                if m2 == m_cur:
+                    continue
+                trial = assoc.copy()
+                trial[n, m_cur], trial[n, m2] = 0, 1
+                trial[n2, m2], trial[n2, m_cur] = 0, 1
+                v = delay.association_latency(problem, trial, a)
+                if v < best_val - 1e-12:
+                    best_val, best_trial = v, trial
+            if best_trial is not None:
+                assoc, cur = best_trial, best_val
+                improved = True
+                break
+        if not improved:
+            break
+    _assert_valid(problem, assoc, cap)
+    return assoc
+
+
+STRATEGIES = {
+    "proposed": lambda p, **kw: proposed(p),
+    "refined": lambda p, a=10.0, **kw: refined(p, a=a),
+    "greedy": lambda p, **kw: greedy(p),
+    "random": lambda p, seed=0, **kw: random_assoc(p, seed=seed),
+}

@@ -1,0 +1,101 @@
+"""Delay model — eqs. (1)–(8) and the objective of problem (13).
+
+All functions are pure numpy over an ``HFLProblem`` instance and an
+association matrix ``assoc`` of shape (N, M) with 0/1 entries, one 1 per row.
+
+Objective (eq. 13):
+
+    total(a, b, chi) = R(a,b,eps) * T(a,b,chi)
+    T  = max_m { b * tau_m + t_{m->c} }          (eq. 34)
+    tau_m = max_{n in N_m} { a * t_cmp_n + t_com_{n->m} }   (eq. 33)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.problem import HFLProblem
+
+
+def local_iterations(theta: float, zeta: float) -> float:
+    """eq. (2): a = zeta * ln(1/theta)."""
+    return zeta * np.log(1.0 / theta)
+
+
+def edge_iterations(mu: float, theta: float, gamma: float) -> float:
+    """eq. (7): b = gamma * ln(1/mu) / (1 - theta)."""
+    return gamma * np.log(1.0 / mu) / (1.0 - theta)
+
+
+def theta_of_a(a, zeta: float):
+    """Invert eq. (2): theta = e^{-a/zeta}."""
+    return np.exp(-np.asarray(a, float) / zeta)
+
+
+def mu_of_b(a, b, zeta: float, gamma: float):
+    """Invert eq. (7): mu = e^{-(b/gamma)(1-theta)}."""
+    return np.exp(-(np.asarray(b, float) / gamma) * (1.0 - theta_of_a(a, zeta)))
+
+
+def cloud_rounds(a, b, *, epsilon: float, zeta: float, gamma: float,
+                 big_c: float = 1.0):
+    """eq. (15): R(a,b,eps) = C ln(1/eps) / (1 - e^{-(b/gamma)(1-e^{-a/zeta})})."""
+    a = np.asarray(a, float)
+    b = np.asarray(b, float)
+    denom = 1.0 - np.exp(-(b / gamma) * (1.0 - np.exp(-a / zeta)))
+    return big_c * np.log(1.0 / epsilon) / np.maximum(denom, 1e-300)
+
+
+def edge_round_time(problem: HFLProblem, assoc: np.ndarray, a) -> np.ndarray:
+    """tau_m (eq. 33): per-edge time of one edge round, shape (M,).
+
+    Edges with no associated UEs contribute 0.
+    """
+    t_cmp = problem.t_cmp()
+    t_com = problem.t_com(assoc)
+    per_ue = np.asarray(a, float) * t_cmp + t_com          # (N,)
+    tau = np.zeros(problem.num_edges)
+    for m in range(problem.num_edges):
+        members = assoc[:, m] > 0
+        if members.any():
+            tau[m] = per_ue[members].max()
+    return tau
+
+
+def cloud_round_time(problem: HFLProblem, assoc: np.ndarray, a, b) -> float:
+    """T (eq. 34): max_m { b * tau_m + t_{m->c} }."""
+    tau = edge_round_time(problem, assoc, a)
+    t_mc = problem.t_edge_cloud()
+    active = assoc.sum(0) > 0
+    vals = np.asarray(b, float) * tau + np.where(active, t_mc, 0.0)
+    return float(vals.max())
+
+
+def total_delay(problem: HFLProblem, assoc: np.ndarray, a, b) -> float:
+    """Objective of problem (13): R(a,b,eps) * T."""
+    r = cloud_rounds(a, b, epsilon=problem.epsilon, zeta=problem.zeta,
+                     gamma=problem.gamma, big_c=problem.big_c)
+    return float(r) * cloud_round_time(problem, assoc, a, b)
+
+
+def objective_breakdown(problem: HFLProblem, assoc: np.ndarray, a, b) -> dict:
+    """All intermediate quantities, for tests/benchmarks."""
+    tau = edge_round_time(problem, assoc, a)
+    t_mc = problem.t_edge_cloud()
+    T = cloud_round_time(problem, assoc, a, b)
+    r = float(cloud_rounds(a, b, epsilon=problem.epsilon, zeta=problem.zeta,
+                           gamma=problem.gamma, big_c=problem.big_c))
+    return {
+        "a": float(a), "b": float(b),
+        "tau": tau, "t_edge_cloud": t_mc, "T": T,
+        "R": r, "total": r * T,
+        "theta": float(theta_of_a(a, problem.zeta)),
+        "mu": float(mu_of_b(a, b, problem.zeta, problem.gamma)),
+    }
+
+
+def association_latency(problem: HFLProblem, assoc: np.ndarray, a) -> float:
+    """Objective of sub-problem II (eq. 38): max_n { a t_cmp + t_com }."""
+    t = np.asarray(a, float) * problem.t_cmp() + problem.t_com(assoc)
+    return float(t.max())

@@ -1,0 +1,10 @@
+"""Data substrate: synthetic datasets + federated partitioners."""
+from repro.data.synthetic import (
+    TokenStream, class_gaussian_images, logreg_data, synthetic_mnist,
+)
+from repro.data.partition import dirichlet_partition, iid_partition, size_partition
+
+__all__ = [
+    "TokenStream", "class_gaussian_images", "logreg_data", "synthetic_mnist",
+    "dirichlet_partition", "iid_partition", "size_partition",
+]

@@ -1,0 +1,18 @@
+"""Three-layer hierarchical FL runtime (Alg. 1).
+
+* ``aggregate`` — weighted model averaging, eqs. (6)/(10).
+* ``clients``   — local solvers: full-batch GD (paper) and DANE [22].
+* ``sim``       — simulation backend: vmap over stacked UE replicas with a
+  simulated wall clock driven by the delay model (Figs. 4/6).
+* ``spmd``      — SPMD backend: shard_map over an ('edge','ue') mesh with
+  grouped psum every ``a`` steps and global psum every ``a*b`` (the TPU
+  adaptation — edge = pod, cloud = cross-pod DCN).
+"""
+from repro.fl.aggregate import weighted_average, stacked_weighted_average
+from repro.fl.sim import HFLSimulator, SimResult
+from repro.fl.spmd import hfl_spmd_round, make_hfl_cloud_round
+
+__all__ = [
+    "weighted_average", "stacked_weighted_average",
+    "HFLSimulator", "SimResult", "hfl_spmd_round", "make_hfl_cloud_round",
+]

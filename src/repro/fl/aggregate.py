@@ -1,0 +1,70 @@
+"""Weighted model aggregation — eqs. (6) and (10).
+
+Two layouts:
+
+* list-of-pytrees (simulation backend bookkeeping);
+* STACKED pytrees whose leaves carry a leading UE axis (the vmap layout) —
+  the hot path; ``stacked_weighted_average`` optionally dispatches to the
+  Pallas ``hier_aggregate`` kernel.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def weighted_average(params_list: Sequence, weights: Sequence[float]):
+    """eq. (6)/(10): sum_n D_n w_n / sum_n D_n over a list of pytrees."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+
+    def avg(*leaves):
+        stack = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        out = jnp.tensordot(w, stack, axes=1)
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *params_list)
+
+
+def stacked_weighted_average(stacked, weights, *, group_ids=None,
+                             num_groups: Optional[int] = None,
+                             use_kernel: bool = False):
+    """Weighted mean over the leading UE axis of every leaf.
+
+    group_ids=None      -> cloud aggregation (eq. 10): one global mean,
+                           broadcast back to every UE slot.
+    group_ids=(N,) ints -> edge aggregation (eq. 6): segment mean per edge,
+                           broadcast back to that edge's members.
+    """
+    weights = jnp.asarray(weights, jnp.float32)
+    if group_ids is None:
+        wsum = jnp.sum(weights)
+
+        def cloud(leaf):
+            if use_kernel:
+                from repro.kernels.ops import hier_aggregate
+                mean = hier_aggregate(leaf, weights)
+            else:
+                lf = leaf.astype(jnp.float32)
+                mean = jnp.tensordot(weights, lf, axes=1) / wsum
+            return jnp.broadcast_to(mean[None], leaf.shape).astype(leaf.dtype)
+
+        return jax.tree.map(cloud, stacked)
+
+    group_ids = jnp.asarray(group_ids, jnp.int32)
+    ng = int(num_groups)
+    gw = jax.ops.segment_sum(weights, group_ids, num_segments=ng)
+
+    def edge(leaf):
+        lf = leaf.astype(jnp.float32)
+        flat = lf.reshape(lf.shape[0], -1)
+        acc = jax.ops.segment_sum(weights[:, None] * flat, group_ids,
+                                  num_segments=ng)
+        mean = acc / jnp.maximum(gw, 1e-12)[:, None]
+        out = mean[group_ids].reshape(lf.shape)
+        return out.astype(leaf.dtype)
+
+    return jax.tree.map(edge, stacked)

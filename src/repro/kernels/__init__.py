@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+* ``flash_attention``  — blocked online-softmax GQA attention (+SWA).
+* ``decode_attention`` — one-token GQA attention over the ring KV cache.
+* ``rglru_scan``       — RG-LRU linear recurrence, sequence-blocked.
+* ``hier_aggregate``   — weighted FedAvg reduction over stacked clients.
+
+Each has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
+public wrappers (interpret=True off-TPU).
+"""

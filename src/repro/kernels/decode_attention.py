@@ -1,0 +1,97 @@
+"""Decode attention Pallas TPU kernel: one query token vs the ring KV cache.
+
+The serving hot-spot: per decode step, each sequence reads its whole KV
+cache once (memory-bound).  The kernel streams the cache in (blk_w, hd)
+VMEM tiles with online softmax, masking slots by their stored position
+(ring semantics: slot_pos[w] = absolute position of the token in slot w,
+-inf-like sentinel for never-written slots — mirrors
+``attention.decode_self_attention``).
+
+Layouts (pre-grouped by ops.py):
+  q:        (BK, g, hd)    g = H // K query heads per kv head
+  k_cache:  (BK, W, hd)
+  v_cache:  (BK, W, hd)
+  slot_pos: (W,)           shared across batch (single stream position)
+  pos:      scalar int32   current absolute position
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, sp_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, blk_w: int, n_w: int,
+                   window: int):
+    wi = pl.program_id(1)
+
+    @pl.when(wi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[0].astype(jnp.float32)                       # (g, hd)
+    k = k_ref[0].astype(jnp.float32)                       # (blk_w, hd)
+    hd = q.shape[-1]
+    s = jnp.einsum("gh,wh->gw", q, k) / jnp.sqrt(hd)       # (g, blk_w)
+    sp = sp_ref[...]                                       # (blk_w,)
+    valid = (sp >= 0) & (sp <= pos)
+    if window > 0:
+        valid &= (pos - sp) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    v = v_ref[0].astype(jnp.float32)                       # (blk_w, hd)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + \
+        jnp.einsum("gw,wh->gh", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(wi == n_w - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def decode_attention_bk(q, k_cache, v_cache, slot_pos, pos, *,
+                        window: int = 0, blk_w: int = 256,
+                        interpret: bool = False):
+    """q (BK,g,hd), caches (BK,W,hd), slot_pos (W,), pos () -> (BK,g,hd)."""
+    BK, g, hd = q.shape
+    W = k_cache.shape[1]
+    blk_w = min(blk_w, W)
+    n_w = pl.cdiv(W, blk_w)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, blk_w=blk_w, n_w=n_w,
+                               window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BK, n_w),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda b, wi, pos: (b, 0, 0)),
+            pl.BlockSpec((1, blk_w, hd), lambda b, wi, pos: (b, wi, 0)),
+            pl.BlockSpec((1, blk_w, hd), lambda b, wi, pos: (b, wi, 0)),
+            pl.BlockSpec((blk_w,), lambda b, wi, pos: (wi,)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda b, wi, pos: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(kernel, grid_spec=grid_spec,
+                          out_shape=jax.ShapeDtypeStruct((BK, g, hd), q.dtype),
+                          interpret=interpret)(pos_arr, q, k_cache, v_cache,
+                                               slot_pos)

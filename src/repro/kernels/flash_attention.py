@@ -1,0 +1,126 @@
+"""Flash attention Pallas TPU kernel (blocked online softmax, GQA, SWA).
+
+TPU adaptation of the FlashAttention blocking scheme: the (Sq, Sk) score
+matrix never leaves VMEM; the grid walks (batch*kv_head, q_block, k_block)
+with the k_block axis innermost ("arbitrary" semantics so the scratch
+accumulator carries across it).  Block shapes keep the MXU busy:
+blk_q x hd and blk_k x hd tiles are multiples of (8, 128) for bf16/fp32.
+
+Causal/sliding-window masking is positional; fully-masked k-blocks are
+skipped with ``pl.when`` (on TPU this elides the DMA + matmul — the FLOP
+savings the xla_flash path cannot express).
+
+Layouts (pre-reshaped by ops.py):
+  q:  (BK, Sq, g, hd)   one batch*kv-head slice per grid row, g = H // K
+  k:  (BK, Sk, hd)
+  v:  (BK, Sk, hd)
+  out:(BK, Sq, g, hd)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 blk_q: int, blk_k: int, n_k: int, offset: int,
+                 causal: bool, window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions of this tile (decode offset aligns sequence ends)
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0) \
+        + offset
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    d = q_pos - k_pos
+    mask = jnp.ones((blk_q, blk_k), bool)
+    if causal:
+        mask &= d >= 0
+    if window > 0:
+        mask &= d < window
+
+    # tile-level skip: the whole block is masked out iff its corner test fails
+    q_lo = qi * blk_q + offset
+    q_hi = q_lo + blk_q - 1
+    k_lo = ki * blk_k
+    k_hi = k_lo + blk_k - 1
+    live = jnp.asarray(True)
+    if causal:
+        live &= q_hi >= k_lo                     # some q sees some k
+    if window > 0:
+        live &= (q_lo - k_hi) < window           # not entirely left of window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                     # (blk_q, g, hd)
+        k = k_ref[0].astype(jnp.float32)                     # (blk_k, hd)
+        hd = q.shape[-1]
+        s = jnp.einsum("qgh,sh->gqs", q, k) / jnp.sqrt(hd)   # (g, blk_q, blk_k)
+        s = jnp.where(mask[None], s, NEG_INF)
+        m_prev = m_ref[...]                                  # (g, blk_q)
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+        v = v_ref[0].astype(jnp.float32)                     # (blk_k, hd)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + \
+            jnp.einsum("gqs,sh->gqh", p, v)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)                   # (g, blk_q)
+        out = acc_ref[...] / l[..., None]                    # (g, blk_q, hd)
+        o_ref[0] = out.transpose(1, 0, 2).astype(o_ref.dtype)
+
+
+def flash_attention_bkh(q, k, v, *, causal: bool = True, window: int = 0,
+                        blk_q: int = 128, blk_k: int = 128,
+                        offset: int = None, interpret: bool = False):
+    """Pre-grouped layout: q (BK,Sq,g,hd), k/v (BK,Sk,hd) -> (BK,Sq,g,hd).
+
+    ``offset`` aligns sequence ends: q row i has absolute position
+    i + offset (default Sk - Sq, the decode convention).  Callers that pad
+    Sq/Sk must pass the offset of the ORIGINAL shapes."""
+    BK, Sq, g, hd = q.shape
+    Sk = k.shape[1]
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    n_q = pl.cdiv(Sq, blk_q)
+    n_k = pl.cdiv(Sk, blk_k)
+
+    if offset is None:
+        offset = Sk - Sq
+    kernel = functools.partial(
+        _attn_kernel, blk_q=blk_q, blk_k=blk_k, n_k=n_k, offset=offset,
+        causal=causal, window=window)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BK, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, g, hd), lambda b, qi, ki: (b, qi, 0, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, g, hd), lambda b, qi, ki: (b, qi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BK, Sq, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, blk_q), jnp.float32),        # running max m
+            pltpu.VMEM((g, blk_q), jnp.float32),        # running sum l
+            pltpu.VMEM((g, blk_q, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

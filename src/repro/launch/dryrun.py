@@ -1,0 +1,194 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) pair.
+
+MUST be the process entry point (python -m repro.launch.dryrun): the first
+two lines below force 512 placeholder CPU devices BEFORE jax initializes.
+Do not import this module from test/bench processes that need 1 device.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config, shape_applicable
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh, num_chips
+from repro.models import build_model
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.roofline.analysis import collective_bytes_from_hlo, roofline_report
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+
+def _rules_for(name: str):
+    return {
+        "default": shd.DEFAULT_RULES,
+        "expert_parallel": shd.EXPERT_PARALLEL_RULES,
+        "no_fsdp": shd.NO_FSDP_RULES,
+        "seq_parallel": shd.SEQ_PARALLEL_RULES,
+        "pure_fsdp": shd.PURE_FSDP_RULES,
+        "kv_seq_sharded": shd.KV_SEQ_SHARDED_RULES,
+    }[name]
+
+
+def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+                rules_name: str = "default", save_hlo: bool = False,
+                impl: str = "xla_flash", microbatches: int = 1):
+    """Lower+compile one pair; returns the result record dict."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = _rules_for(rules_name)
+    model = build_model(cfg, mesh=mesh, rules=rules, impl=impl,
+                        param_dtype=jnp.bfloat16, act_dtype=jnp.bfloat16)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            optimizer = adamw(1e-4)
+            step = steps_lib.make_train_step(model, optimizer,
+                                             microbatches=microbatches)
+            in_sh, args = steps_lib.train_shardings(model, optimizer, shape, rules)
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              donate_argnums=(0, 1)).lower(*args)
+        elif shape.kind == "prefill":
+            in_sh, args = steps_lib.prefill_shardings(model, shape, rules)
+
+            def prefill_logits(params, batch):
+                logits, _state = model.prefill(params, batch)
+                return logits
+
+            lowered = jax.jit(prefill_logits, in_shardings=in_sh).lower(*args)
+        else:  # decode
+            step = steps_lib.make_serve_step(model)
+            in_sh, args = steps_lib.decode_shardings(model, shape, rules)
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              donate_argnums=(1,)).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "rules": rules_name,
+        "impl": impl,
+        "microbatches": microbatches,
+        "status": "ok",
+        "chips": num_chips(mesh),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+            "transcendentals": cost.get("transcendentals", 0.0),
+        },
+        "collectives": coll,
+    }
+    rec["roofline"] = roofline_report(cfg, shape, rec, mesh)
+    if save_hlo:
+        os.makedirs(RESULT_DIR, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{'mp' if multi_pod else 'sp'}_{rules_name}"
+        with open(os.path.join(RESULT_DIR, tag + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def save_record(rec):
+    os.makedirs(RESULT_DIR, exist_ok=True)
+    tag = "{}_{}_{}_{}".format(rec["arch"], rec["shape"],
+                               "mp" if rec["multi_pod"] else "sp",
+                               rec.get("rules", "default"))
+    impl = rec.get("impl", "xla_flash")
+    if impl != "xla_flash":
+        tag += "_" + impl
+    if rec.get("microbatches", 1) > 1:
+        tag += f"_mb{rec['microbatches']}"
+    with open(os.path.join(RESULT_DIR, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default="default",
+                    choices=["default", "expert_parallel", "no_fsdp",
+                             "seq_parallel", "pure_fsdp", "kv_seq_sharded"])
+    ap.add_argument("--impl", default="xla_flash")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--all", action="store_true", help="full 10x4 matrix")
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape in pairs:
+        try:
+            rec = dryrun_pair(arch, shape, multi_pod=args.multi_pod,
+                              rules_name=args.rules, save_hlo=args.save_hlo,
+                              impl=args.impl, microbatches=args.microbatch)
+        except Exception as e:  # record the failure, keep going
+            rec = {"arch": arch, "shape": shape, "multi_pod": args.multi_pod,
+                   "rules": args.rules, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()}
+        save_record(rec)
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_skip += st == "skipped"
+        n_fail += st == "error"
+        if st == "ok":
+            m = rec["memory"]
+            print(f"[OK]   {arch:22s} {shape:12s} "
+                  f"compile={rec['compile_s']:7.1f}s "
+                  f"temp/dev={(m['temp_bytes'] or 0)/2**30:6.2f}GiB "
+                  f"args/dev={(m['argument_bytes'] or 0)/2**30:6.2f}GiB "
+                  f"flops={rec['cost']['flops']:.3e}")
+            print(f"       memory_analysis: {m}")
+            print(f"       cost_analysis:   {rec['cost']}")
+        elif st == "skipped":
+            print(f"[SKIP] {arch:22s} {shape:12s} {rec['reason']}")
+        else:
+            print(f"[FAIL] {arch:22s} {shape:12s} {rec['error']}")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,74 @@
+"""Mesh construction for single-pod and multi-pod TPU v5e targets.
+
+All constructors are FUNCTIONS so that importing this module never touches
+jax device state (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+# Canonical axis names.  'pod' is the cross-pod (DCN) axis; 'data' is the
+# in-pod data/FSDP axis; 'model' is the tensor-parallel axis.
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis and by
+# the delay-model bridge (repro.core.schedule.plan_from_roofline).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link, intra-pod
+DCN_BW = 6.25e9                   # bytes/s per host, cross-pod (25GbE x2 assumed)
+HBM_BYTES = 16 * 1024**3          # 16 GiB
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The production mesh: 16x16 = 256 chips per pod; 2 pods = 512 chips.
+
+    When more devices exist than the mesh needs (the dry-run process exposes
+    512 placeholder devices and the single-pod mesh needs 256), the first
+    prod(shape) devices are used.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = (POD_AXIS, DATA_AXIS, MODEL_AXIS) if multi_pod else (DATA_AXIS, MODEL_AXIS)
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} — the dry-run "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import")
+    return jax.sharding.Mesh(np.array(devs[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """A small mesh over whatever devices exist (CPU tests/examples)."""
+    devs = np.array(jax.devices()[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(devs, (DATA_AXIS, MODEL_AXIS))
+
+
+def make_fl_mesh(num_edges: int, ues_per_edge: int):
+    """Mesh for the SPMD hierarchical-FL backend: ('edge', 'ue').
+
+    Each mesh row is one edge server's UE group; the cloud round reduces over
+    both axes.  Used with jax.shard_map in repro.fl.spmd.
+    """
+    n = num_edges * ues_per_edge
+    devs = np.array(jax.devices()[:n]).reshape(num_edges, ues_per_edge)
+    return jax.sharding.Mesh(devs, ("edge", "ue"))
+
+
+def mesh_axis_names(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def data_axes(mesh) -> tuple:
+    """Axes over which the batch is sharded."""
+    return tuple(a for a in mesh.axis_names if a in (POD_AXIS, DATA_AXIS))
+
+
+def num_chips(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,143 @@
+"""Step assembly: jitted train / prefill / serve steps with shardings.
+
+The dry-run and the real launcher share this code: given a Model, a mesh and
+an optimizer, build the jitted step functions with in/out shardings derived
+from the model's logical-axes annotations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer, opt_state_axes
+from repro.parallel import sharding as shd
+
+
+def make_train_step(model, optimizer: Optimizer, microbatches: int = 1):
+    """Jittable train step; ``microbatches > 1`` scans over batch slices
+    accumulating grads in f32 (cuts peak activation memory ~1/n at the cost
+    of n weight-gather passes — a §Perf lever for FSDP-style shardings)."""
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+        else:
+            n = microbatches
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+            def mb_step(acc, mb):
+                g_acc, l_acc = acc
+                (l, _m), g = jax.value_and_grad(model.loss, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                mb_step, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss / n
+            metrics = {}
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(model):
+    def serve_step(params, state, tokens):
+        logits, state = model.decode_step(params, state, tokens)
+        next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return next_tok, state
+
+    return serve_step
+
+
+def train_shardings(model, optimizer: Optimizer, shape_cfg, rules=None):
+    """(in_shardings, arg ShapeDtypeStructs) for train_step on model.mesh."""
+    mesh = model.mesh
+    rules = rules or model.rules
+    p_shapes = model.param_shapes()
+    p_axes = model.axes()
+    p_sh = shd.logical_to_sharding(mesh, p_axes, p_shapes, rules)
+    o_shapes = jax.eval_shape(optimizer.init, p_shapes)
+    o_axes = opt_state_axes(p_axes, o_shapes)
+    o_sh = _opt_shardings(mesh, o_axes, o_shapes, rules)
+    b_shapes = model.input_specs(shape_cfg)
+    b_axes = model.input_axes(shape_cfg)
+    b_sh = shd.logical_to_sharding(mesh, b_axes, b_shapes, rules)
+    return (p_sh, o_sh, b_sh), (p_shapes, o_shapes, b_shapes)
+
+
+def _opt_shardings(mesh, o_axes, o_shapes, rules):
+    if o_axes == () or o_axes is None:
+        return ()
+    if isinstance(o_axes, dict) and "mu" in o_axes:
+        return {
+            "mu": shd.logical_to_sharding(mesh, o_axes["mu"], o_shapes["mu"], rules),
+            "nu": shd.logical_to_sharding(mesh, o_axes["nu"], o_shapes["nu"], rules),
+            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        }
+    return shd.logical_to_sharding(mesh, o_axes, o_shapes, rules)
+
+
+def decode_shardings(model, shape_cfg, rules=None):
+    """(in_shardings, arg shapes) for serve_step."""
+    mesh = model.mesh
+    rules = rules or model.rules
+    p_shapes = model.param_shapes()
+    p_sh = shd.logical_to_sharding(mesh, model.axes(), p_shapes, rules)
+    s_shapes = model.decode_state_specs(shape_cfg)
+    s_axes = model.decode_state_axes()
+    s_sh = _state_shardings(mesh, s_axes, s_shapes, rules)
+    t_shapes = model.input_specs(shape_cfg)["tokens"]
+    t_sh = shd.logical_to_sharding(mesh, ("batch", None), t_shapes, rules)
+    return (p_sh, s_sh, t_sh), (p_shapes, s_shapes, t_shapes)
+
+
+def _state_shardings(mesh, s_axes, s_shapes, rules):
+    """State axes trees have tuple leaves; align them with the shape tree."""
+    flat_shapes, treedef = jax.tree.flatten(s_shapes)
+    flat_axes = _flatten_axes(s_axes, s_shapes)
+    shs = [
+        shd.logical_to_sharding(mesh, ax, shp, rules)
+        for ax, shp in zip(flat_axes, flat_shapes)
+    ]
+    return jax.tree.unflatten(treedef, shs)
+
+
+def _flatten_axes(axes_tree, shape_tree):
+    """Flatten axes tree in the same order as the shape tree leaves."""
+    out = []
+
+    def rec(a, s):
+        if isinstance(s, dict):
+            for k in sorted(s):
+                rec(a[k] if isinstance(a, dict) else a, s[k])
+        elif isinstance(s, (list, tuple)):
+            for i, sv in enumerate(s):
+                av = a[i] if isinstance(a, (list, tuple)) and len(a) == len(s) else a
+                rec(av, sv)
+        else:
+            out.append(a if (a is None or isinstance(a, tuple)) else None)
+
+    rec(axes_tree, shape_tree)
+    return out
+
+
+def prefill_shardings(model, shape_cfg, rules=None):
+    mesh = model.mesh
+    rules = rules or model.rules
+    p_shapes = model.param_shapes()
+    p_sh = shd.logical_to_sharding(mesh, model.axes(), p_shapes, rules)
+    b_shapes = model.input_specs(shape_cfg)
+    b_sh = shd.logical_to_sharding(mesh, model.input_axes(shape_cfg), b_shapes, rules)
+    return (p_sh, b_sh), (p_shapes, b_shapes)

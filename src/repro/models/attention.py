@@ -1,0 +1,274 @@
+"""GQA attention: blocked online-softmax (XLA flash), decode w/ ring KV cache.
+
+Three implementations of the score/softmax/value contraction:
+  * ``xla_flash``  — lax.scan over key blocks with online softmax; memory is
+                     O(S * block) instead of O(S^2).  Default: lowers on every
+                     backend (the dry-run path).
+  * ``naive``      — full S x S scores; test oracle for small shapes.
+  * ``pallas``     — repro.kernels.flash_attention, the TPU hot-spot kernel
+                     (validated interpret=True; selected via attn_impl).
+Supports causal, sliding-window and bidirectional masking, GQA head groups,
+partial RoPE, and qk-norm.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Spec, apply_rope, match_vma, rms_norm, rope_freqs
+
+NEG_INF = -2.0e38
+
+
+def attention_specs(cfg, d: Optional[int] = None):
+    d = d or cfg.d_model
+    hd = cfg.resolved_head_dim
+    s = {
+        "wq": Spec((d, cfg.num_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": Spec((d, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Spec((d, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Spec((cfg.num_heads, hd, d), ("heads", "head_dim", "embed"), fan_in=cfg.num_heads * hd),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = Spec((hd,), ("head_dim",), "ones")
+        s["k_norm"] = Spec((hd,), ("head_dim",), "ones")
+    return s
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """(..., Sq, Sk) bool mask; True = attend."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    if causal:
+        m &= d >= 0
+    if window > 0:
+        m &= d < window
+    return m
+
+
+def naive_attention(q, k, v, q_pos, k_pos, causal=True, window=0):
+    """q: (B,Sq,H,hd)  k,v: (B,Sk,K,hd).  Oracle implementation."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    g = H // K
+    qg = q.reshape(B, Sq, K, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores *= 1.0 / jnp.sqrt(hd)
+    m = _mask(q_pos, k_pos, causal, window)  # (B?,Sq,Sk) or (Sq,Sk)
+    while m.ndim < scores.ndim:
+        m = m[..., None, :, :] if m.ndim >= 2 else m
+    scores = jnp.where(m, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def xla_flash_attention(q, k, v, q_pos, k_pos, causal=True, window=0, block=1024):
+    """Blocked online-softmax attention via lax.scan over key blocks.
+
+    q: (B,Sq,H,hd); k,v: (B,Sk,K,hd); positions int32 (Sq,)/(Sk,).
+    Returns (B,Sq,H,hd).  All-block scan (masking only) — FLOPs are the
+    dense upper bound; the Pallas kernel skips fully-masked blocks on TPU.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    g = H // K
+    blk = min(block, Sk)
+    n_blk = (Sk + blk - 1) // blk
+    pad = n_blk * blk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-(10 ** 9))
+    qg = (q.reshape(B, Sq, K, g, hd) * (1.0 / jnp.sqrt(hd))).astype(q.dtype)
+    kb = k.reshape(B, n_blk, blk, K, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blk, blk, K, hd).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(n_blk, blk)
+
+    def step(carry, xs):
+        m_i, l_i, acc = carry
+        kb_i, vb_i, pos_i = xs
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kb_i).astype(jnp.float32)
+        msk = _mask(q_pos, pos_i, causal, window)  # (Sq, blk)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_i * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(vb_i.dtype), vb_i
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0, l0, a0 = match_vma((
+        jnp.full((B, K, g, Sq), NEG_INF, jnp.float32),
+        jnp.zeros((B, K, g, Sq), jnp.float32),
+        jnp.zeros((B, K, g, Sq, hd), jnp.float32)), q)
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _project_qkv(cfg, p, x, positions, inv_freqs):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, inv_freqs)
+    k = apply_rope(k, positions, inv_freqs)
+    return q, k, v
+
+
+def self_attention(cfg, p, x, *, causal=True, window=0, impl="xla_flash",
+                   positions=None, constrain=None):
+    """Full-sequence self attention (train / prefill)."""
+    B, S, _ = x.shape
+    inv_freqs = rope_freqs(cfg, cfg.resolved_head_dim)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, positions, inv_freqs)
+    if constrain is not None:
+        q = constrain(q, ("batch", "seq", "act_heads", "head_dim"))
+    if impl == "naive":
+        o = naive_attention(q, k, v, positions, positions, causal, window)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        o = xla_flash_attention(q, k, v, positions, positions, causal, window)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def cross_attention_specs(cfg):
+    return attention_specs(cfg)
+
+
+def cross_attention(cfg, p, x, kv_k, kv_v, impl="xla_flash"):
+    """Decoder cross-attention against precomputed encoder K/V (B,Se,K,hd)."""
+    B, Sq, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    Se = kv_k.shape[1]
+    qp = jnp.arange(Sq, dtype=jnp.int32)
+    kp = jnp.arange(Se, dtype=jnp.int32)
+    if impl == "naive" or Sq == 1:
+        o = naive_attention(q, kv_k, kv_v, qp, kp, causal=False)
+    else:
+        o = xla_flash_attention(q, kv_k, kv_v, qp, kp, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def encode_kv(cfg, p, enc_out):
+    """Precompute cross-attn K/V from encoder output."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# Decode path: ring-buffer KV cache, one token per call
+# --------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_len: int, window: int = 0, dtype=jnp.bfloat16):
+    """Cache dict. ``window>0`` -> ring buffer of that size (SWA/local attn)."""
+    W = min(window, max_len) if window > 0 else max_len
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, W, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, W, cfg.num_kv_heads, hd), dtype),
+        "slot_pos": jnp.full((W,), -(10 ** 9), jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def kv_cache_specs(cfg, batch: int, max_len: int, window: int = 0, dtype=jnp.bfloat16):
+    c = jax.eval_shape(lambda: init_kv_cache(cfg, batch, max_len, window, dtype))
+    axes = {
+        "k": ("batch", "seq", "kv_heads", "head_dim"),
+        "v": ("batch", "seq", "kv_heads", "head_dim"),
+        "slot_pos": ("seq",),
+        "pos": None,
+    }
+    return c, axes
+
+
+def decode_self_attention(cfg, p, x, cache, *, window=0):
+    """x: (B,1,D).  Insert token at cache['pos'], attend over valid slots."""
+    B = x.shape[0]
+    W = cache["k"].shape[1]
+    hd = cfg.resolved_head_dim
+    inv_freqs = rope_freqs(cfg, hd)
+    pos = cache["pos"]
+    positions = pos[None].astype(jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, positions, inv_freqs)
+    slot = jnp.mod(pos, W)
+    new_k = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    new_slot_pos = jax.lax.dynamic_update_slice(cache["slot_pos"], pos[None], (slot,))
+
+    H = cfg.num_heads
+    K = cfg.num_kv_heads
+    g = H // K
+    qg = q.reshape(B, 1, K, g, hd) * (1.0 / jnp.sqrt(hd))
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, new_k).astype(jnp.float32)
+    # empty slots hold slot_pos = -1e9 ("never written") — exclude them
+    valid = (new_slot_pos >= 0) & (new_slot_pos <= pos)
+    if window > 0:
+        valid &= (pos - new_slot_pos) < window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", pr.astype(new_v.dtype), new_v).reshape(B, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
+    new_cache = {"k": new_k, "v": new_v, "slot_pos": new_slot_pos, "pos": pos + 1}
+    return out, new_cache
+
+
+def self_attention_prefill(cfg, p, x, *, causal=True, window=0,
+                           impl="xla_flash", cache_len=None,
+                           dtype=jnp.bfloat16, constrain=None):
+    """Full-sequence self-attention that ALSO returns the ring KV cache
+    positioned for decode continuation (slot t%W holds token t)."""
+    B, S, _ = x.shape
+    inv_freqs = rope_freqs(cfg, cfg.resolved_head_dim)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, positions, inv_freqs)
+    if constrain is not None:
+        q = constrain(q, ("batch", "seq", "act_heads", "head_dim"))
+    if impl == "naive":
+        o = naive_attention(q, k, v, positions, positions, causal, window)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        o = xla_flash_attention(q, k, v, positions, positions, causal, window)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+    W = min(window, cache_len or S) if window > 0 else (cache_len or S)
+    keep = min(W, S)
+    kept_pos = positions[S - keep:]
+    slots = jnp.mod(kept_pos, W)
+    cache = init_kv_cache(cfg, B, W, window=0, dtype=dtype)
+    cache["k"] = cache["k"].at[:, slots].set(k[:, S - keep:].astype(dtype))
+    cache["v"] = cache["v"].at[:, slots].set(v[:, S - keep:].astype(dtype))
+    cache["slot_pos"] = cache["slot_pos"].at[slots].set(kept_pos)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return out, cache
+
+
+def prefill_kv_cache(cfg, p, x, *, window=0, max_len=None, dtype=jnp.bfloat16):
+    """Build a cache from a full prompt (keeps last W entries)."""
+    B, S, _ = x.shape
+    W = min(window, S) if window > 0 else (max_len or S)
+    inv_freqs = rope_freqs(cfg, cfg.resolved_head_dim)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    _, k, v = _project_qkv(cfg, p, x, positions, inv_freqs)
+    keep = min(W, S)
+    cache = init_kv_cache(cfg, B, W, window=0, dtype=dtype)
+    cache["k"] = cache["k"].at[:, :keep].set(k[:, S - keep:].astype(dtype))
+    cache["v"] = cache["v"].at[:, :keep].set(v[:, S - keep:].astype(dtype))
+    cache["slot_pos"] = cache["slot_pos"].at[:keep].set(positions[S - keep:])
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return cache

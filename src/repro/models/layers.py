@@ -1,0 +1,198 @@
+"""Core layer library: param specs, norms, MLP, embeddings, RoPE.
+
+Parameters are plain dict pytrees.  Every module exposes
+  specs(cfg)  -> pytree of Spec (shape + LOGICAL axes + init)
+  apply(...)  -> forward
+``init_tree``/``axes_tree`` turn a spec tree into params / logical-axes
+annotations consumed by repro.parallel.sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones
+    fan_in: Optional[int] = None  # None -> shape[0]
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x):
+    return isinstance(x, Spec)
+
+
+def init_tree(rng, spec_tree, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    rngs = jax.random.split(rng, max(len(leaves), 2))
+
+    def one(spec: Spec, key):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        fan_in = spec.fan_in or (spec.shape[0] if spec.shape else 1)
+        std = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+        return (jax.random.truncated_normal(key, -2.0, 2.0, spec.shape, jnp.float32) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [one(s, k) for s, k in zip(leaves, rngs)])
+
+
+def axes_tree(spec_tree):
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=_is_spec)
+
+
+def shape_tree(spec_tree, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree, is_leaf=_is_spec
+    )
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layer"):
+    """Prepend a stacking dim (for lax.scan over layers)."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.fan_in or (s.shape[0] if s.shape else 1)),
+        spec_tree,
+        is_leaf=_is_spec,
+    )
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def norm_specs(cfg, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm_type == "layernorm":
+        return {"scale": Spec((d,), ("act_embed",), "ones"),
+                "bias": Spec((d,), ("act_embed",), "zeros")}
+    return {"scale": Spec((d,), ("act_embed",), "ones")}
+
+
+def apply_norm(cfg, p, x):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(x, -1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), -1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(x), -1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Activations / MLP
+# --------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_specs(cfg, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "silu":  # SwiGLU: gate + up + down
+        return {
+            "wi_gate": Spec((d, f), ("embed", "mlp")),
+            "wi_up": Spec((d, f), ("embed", "mlp")),
+            "wo": Spec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": Spec((d, f), ("embed", "mlp")),
+        "wo": Spec((f, d), ("mlp", "embed")),
+    }
+
+
+def apply_mlp(cfg, p, x, constrain=None):
+    a = act_fn(cfg.act)
+    if "wi_gate" in p:
+        h = a(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    else:
+        h = a(x @ p["wi"])
+    if constrain is not None:
+        h = constrain(h, ("batch", "seq", "mlp"))
+    return h @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# Embeddings / unembedding
+# --------------------------------------------------------------------------
+
+def embed_specs(cfg):
+    s = {"embedding": Spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), fan_in=cfg.d_model)}
+    if not cfg.tie_embeddings:
+        s["lm_head"] = Spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return s
+
+
+def embed_tokens(p, tokens, scale: float = 1.0):
+    return p["embedding"][tokens] * scale
+
+
+def unembed_matrix(cfg, p):
+    return p["embedding"].T if cfg.tie_embeddings else p["lm_head"]
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (full / partial fraction / none)
+# --------------------------------------------------------------------------
+
+def rope_freqs(cfg, head_dim: int):
+    rot = int(head_dim * cfg.rope_fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return None
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv  # (rot/2,)
+
+
+def apply_rope(x, positions, inv_freqs):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    if inv_freqs is None:
+        return x
+    rot = inv_freqs.shape[0] * 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., :, None].astype(jnp.float32) * inv_freqs  # (..., S, rot/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def sinusoidal_positions(seq_len: int, d: int):
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((seq_len, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (d + 1) // 2]))
+    return pe
+
+def match_vma(tree, x):
+    """Give scan-carry inits the varying-manual-axes of ``x`` (shard_map).
+
+    Inside ``jax.shard_map`` a ``lax.scan`` carry must have the same
+    varying-axes type as the loop outputs; fresh ``jnp.zeros`` inits are
+    unvarying.  Adding a zero scalar derived from ``x`` joins the types
+    and folds away in XLA.  A no-op outside shard_map.
+    """
+    zero = (x.ravel()[0] * 0).astype(jnp.float32)
+    return jax.tree.map(lambda z: z + zero.astype(z.dtype), tree)

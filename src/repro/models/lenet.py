@@ -1,0 +1,88 @@
+"""LeNet in pure JAX — the paper's own simulation model (§V, Figs. 4/6).
+
+Strongly-convex logistic regression (for which Assumption 1 actually holds)
+is also provided; the paper's convergence-count formulas (eqs. 2/7) assume
+β-strong convexity + L-smoothness.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.lenet_mnist import LeNetConfig
+
+
+def lenet_init(rng, cfg: LeNetConfig):
+    k = jax.random.split(rng, 8)
+    c1, c2 = cfg.conv_channels
+    ks = cfg.kernel_size
+    sz = cfg.image_size
+    # two valid convs + 2x2 pools
+    s1 = (sz - ks + 1) // 2
+    s2 = (s1 - ks + 1) // 2
+    flat = s2 * s2 * c2
+    f1, f2 = cfg.fc_dims
+
+    def dense(key, i, o):
+        return {"w": jax.random.normal(key, (i, o)) * jnp.sqrt(2.0 / i),
+                "b": jnp.zeros((o,))}
+
+    return {
+        "conv1": {"w": jax.random.normal(k[0], (ks, ks, cfg.in_channels, c1)) * 0.1,
+                  "b": jnp.zeros((c1,))},
+        "conv2": {"w": jax.random.normal(k[1], (ks, ks, c1, c2)) * 0.1,
+                  "b": jnp.zeros((c2,))},
+        "fc1": dense(k[2], flat, f1),
+        "fc2": dense(k[3], f1, f2),
+        "out": dense(k[4], f2, cfg.num_classes),
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def lenet_apply(params, images):
+    """images: (B, H, W, C) -> logits (B, num_classes)."""
+    x = jnp.tanh(_conv(images, params["conv1"]["w"], params["conv1"]["b"]))
+    x = _pool(x)
+    x = jnp.tanh(_conv(x, params["conv2"]["w"], params["conv2"]["b"]))
+    x = _pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.tanh(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jnp.tanh(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["out"]["w"] + params["out"]["b"]
+
+
+def lenet_loss(params, batch):
+    logits = lenet_apply(params, batch["images"])
+    labels = batch["labels"]
+    ll = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(ll, labels[:, None], 1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"acc": acc}
+
+
+# -- strongly convex task (Assumption 1 holds exactly) ----------------------
+
+def logreg_init(rng, dim: int, num_classes: int):
+    return {"w": jnp.zeros((dim, num_classes)), "b": jnp.zeros((num_classes,))}
+
+
+def logreg_loss(params, batch, l2: float = 1e-3):
+    """l2 > 0 makes the objective β-strongly convex with β = l2."""
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    logits = x @ params["w"] + params["b"]
+    ll = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(ll, batch["labels"][:, None], 1))
+    reg = 0.5 * l2 * (jnp.sum(params["w"] ** 2) + jnp.sum(params["b"] ** 2))
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+    return loss + reg, {"acc": acc}

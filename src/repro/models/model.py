@@ -1,0 +1,326 @@
+"""Public model API: build_model(cfg) -> Model.
+
+A Model is mesh-agnostic; the launcher jits its methods with shardings
+derived from ``Model.axes()`` via repro.parallel.sharding.
+
+Batch layouts (see ``input_specs``):
+  train   {'tokens','targets'} (+ 'patches' for vlm, 'frames' for audio)
+  prefill {'tokens'} (+ frontend embeds)
+  decode  {'tokens': (B,1)} with a separate decode-state pytree
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention as attn_mod
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    apply_norm, axes_tree, embed_specs, embed_tokens, init_tree, norm_specs,
+    shape_tree, sinusoidal_positions, unembed_matrix,
+)
+
+
+def chunked_cross_entropy(hidden, w_unembed, targets, mask=None, chunk=512):
+    """Never materializes (B,S,V): lax.scan over sequence chunks.
+
+    hidden: (B,S,D); w_unembed: (D,V); targets: (B,S) int32.
+    Returns (sum_loss, sum_count).
+    """
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    n = (S + chunk - 1) // chunk
+    pad = n * chunk - S
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hs = jnp.moveaxis(hidden.reshape(B, n, chunk, D), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, n, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0)
+
+    def step(carry, xs):
+        h, t, m = xs
+        logits = (h @ w_unembed).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, -1)
+        ll = jnp.take_along_axis(logits, t[..., None], -1)[..., 0]
+        loss = jnp.sum((lse - ll) * m)
+        return (carry[0] + loss, carry[1] + jnp.sum(m)), None
+
+    from repro.models.layers import match_vma
+    carry0 = match_vma((jnp.zeros((), jnp.float32),
+                        jnp.zeros((), jnp.float32)), hidden)
+    (loss, count), _ = jax.lax.scan(step, carry0, (hs, ts, ms))
+    return loss, count
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, *, mesh=None, rules=None,
+                 impl: str = "xla_flash", param_dtype=jnp.float32,
+                 act_dtype=jnp.float32, remat: bool = True,
+                 decode_margin: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = rules
+        self.impl = impl
+        self.param_dtype = param_dtype
+        self.act_dtype = act_dtype
+        self.remat = remat
+        # extra KV-cache slots reserved past the prompt by prefill()
+        # (0 -> reserve one prompt-length's worth)
+        self.decode_margin = decode_margin
+
+    # -- params ------------------------------------------------------------
+
+    def param_specs(self):
+        cfg = self.cfg
+        s: Dict[str, Any] = dict(embed_specs(cfg))
+        s["final_norm"] = norm_specs(cfg)
+        if cfg.encoder_decoder:
+            s.update(tfm.encdec_specs_tree(cfg))
+        else:
+            s.update(tfm.stack_specs_tree(cfg))
+        return s
+
+    def init(self, rng):
+        return init_tree(rng, self.param_specs(), self.param_dtype)
+
+    def axes(self):
+        return axes_tree(self.param_specs())
+
+    def param_shapes(self):
+        return shape_tree(self.param_specs(), self.param_dtype)
+
+    def num_params(self) -> int:
+        return sum(int(math.prod(s.shape)) for s in jax.tree.leaves(
+            self.param_specs(), is_leaf=lambda x: hasattr(x, "shape")))
+
+    # -- helpers -----------------------------------------------------------
+
+    def _constrain(self):
+        if self.mesh is None:
+            return None
+        from repro.parallel import sharding as shd
+        mesh, rules = self.mesh, self.rules
+        return lambda x, axes: shd.constrain(x, mesh, axes, rules)
+
+    def _embed(self, params, tokens):
+        return embed_tokens(params, tokens).astype(self.act_dtype)
+
+    def _backbone(self, params, x):
+        return tfm.apply_stack(
+            self.cfg, params, x, mesh=self.mesh, rules=self.rules,
+            impl=self.impl, constrain=self._constrain(), remat=self.remat)
+
+    def _hidden_train(self, params, batch):
+        """Returns (hidden_for_loss, targets, aux)."""
+        cfg = self.cfg
+        con = self._constrain()
+        if cfg.encoder_decoder:
+            frames = batch["frames"].astype(self.act_dtype)
+            enc = tfm.apply_encoder(cfg, params, frames, impl=self.impl,
+                                    constrain=con, remat=self.remat)
+            tok = self._embed(params, batch["tokens"])
+            tok = tok + sinusoidal_positions(tok.shape[1], cfg.d_model).astype(tok.dtype)
+            h = tfm.apply_decoder(cfg, params, tok, enc, impl=self.impl,
+                                  constrain=con, remat=self.remat)
+            h = apply_norm(cfg, params["final_norm"], h)
+            return h, batch["targets"], jnp.zeros((), jnp.float32)
+        if cfg.frontend == "vision":
+            patches = batch["patches"].astype(self.act_dtype)
+            tok = self._embed(params, batch["tokens"])
+            x = jnp.concatenate([patches, tok], axis=1)
+            if con is not None:
+                x = con(x, ("batch", "seq", "act_embed"))
+            x, aux = self._backbone(params, x)
+            x = apply_norm(cfg, params["final_norm"], x)
+            P = cfg.num_prefix_embeds
+            St = batch["tokens"].shape[1]
+            h = jax.lax.dynamic_slice_in_dim(x, P - 1, St, axis=1)
+            return h, batch["targets"], aux
+        x = self._embed(params, batch["tokens"])
+        if con is not None:
+            x = con(x, ("batch", "seq", "act_embed"))
+        x, aux = self._backbone(params, x)
+        x = apply_norm(cfg, params["final_norm"], x)
+        return x, batch["targets"], aux
+
+    # -- public forward ----------------------------------------------------
+
+    def loss(self, params, batch):
+        """Mean next-token CE (+ MoE aux)."""
+        h, targets, aux = self._hidden_train(params, batch)
+        w = unembed_matrix(self.cfg, params).astype(self.act_dtype)
+        loss_sum, count = chunked_cross_entropy(h, w, targets,
+                                                chunk=self.cfg.loss_chunk)
+        loss = loss_sum / jnp.maximum(count, 1.0)
+        return loss + aux, {"ce": loss, "aux": aux}
+
+    def prefill(self, params, batch):
+        """Full-prompt forward; returns (last_logits, decode_state)."""
+        cfg = self.cfg
+        con = self._constrain()
+        if cfg.encoder_decoder:
+            frames = batch["frames"].astype(self.act_dtype)
+            enc = tfm.apply_encoder(cfg, params, frames, impl=self.impl,
+                                    constrain=con, remat=False)
+            state = self._encdec_state(params, enc, batch["tokens"].shape[0],
+                                       frames.shape[1] // cfg.decoder_len_ratio)
+            logits, state = self.decode_step(params, state, batch["tokens"][:, :1])
+            return logits, state
+        if cfg.frontend == "vision":
+            patches = batch["patches"].astype(self.act_dtype)
+            tok = self._embed(params, batch["tokens"])
+            x = jnp.concatenate([patches, tok], axis=1)
+        else:
+            x = self._embed(params, batch["tokens"])
+        S = x.shape[1]
+        max_len = S + (self.decode_margin or S)
+        x, state = tfm.prefill_stack(
+            cfg, params, x, cache_len=max_len,
+            dtype=_state_dtype(self.act_dtype), impl=self.impl,
+            mesh=self.mesh, rules=self.rules, constrain=con)
+        x = apply_norm(cfg, params["final_norm"], x)
+        w = unembed_matrix(cfg, params).astype(self.act_dtype)
+        logits = x[:, -1:] @ w
+        return logits, state
+
+    # -- decode ------------------------------------------------------------
+
+    def init_decode_state(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        dt = _state_dtype(self.act_dtype)
+        if cfg.encoder_decoder:
+            enc_len = max_len
+            dec_len = max(max_len // cfg.decoder_len_ratio, 8)
+            hd = cfg.resolved_head_dim
+            cross = [
+                {"k": jnp.zeros((batch_size, enc_len, cfg.num_kv_heads, hd), dt),
+                 "v": jnp.zeros((batch_size, enc_len, cfg.num_kv_heads, hd), dt)}
+                for _ in range(cfg.num_layers)
+            ]
+            self_state = [
+                tfm.init_layer_state(cfg, "attn", batch_size, dec_len, dt)
+                for _ in range(cfg.num_layers)
+            ]
+            return {"cross": cross, "self": self_state}
+        return tfm.init_stack_state(cfg, batch_size, max_len, dtype=dt)
+
+    def decode_state_axes(self):
+        cfg = self.cfg
+        if cfg.encoder_decoder:
+            kv_ax = {"k": ("batch", "seq", "kv_heads", "head_dim"),
+                     "v": ("batch", "seq", "kv_heads", "head_dim")}
+            self_ax = tfm.layer_state_axes(cfg, "attn")
+            return {"cross": [kv_ax] * cfg.num_layers,
+                    "self": [self_ax] * cfg.num_layers}
+        return tfm.stack_state_axes(cfg)
+
+    def _encdec_state(self, params, enc_out, batch: int, dec_len: int):
+        cfg = self.cfg
+        dt = _state_dtype(self.act_dtype)
+        cross = []
+        for lp in params["decoder"]:
+            k, v = attn_mod.encode_kv(cfg, lp["xattn"], enc_out)
+            cross.append({"k": k.astype(dt), "v": v.astype(dt)})
+        self_state = [tfm.init_layer_state(cfg, "attn", batch, dec_len, dt)
+                      for _ in range(cfg.num_layers)]
+        return {"cross": cross, "self": self_state}
+
+    def decode_step(self, params, state, tokens):
+        """tokens: (B,1) -> (logits (B,1,V), new_state)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        if cfg.encoder_decoder:
+            pos = state["self"][0]["pos"]
+            x = x + _sinusoid_at(pos, cfg.d_model).astype(x.dtype)
+            new_self = []
+            for lp, st, cr in zip(params["decoder"], state["self"], state["cross"]):
+                h, st2 = attn_mod.decode_self_attention(
+                    cfg, lp["attn"], apply_norm(cfg, lp["ln1"], x), st, window=0)
+                x = x + h
+                x = x + attn_mod.cross_attention(
+                    cfg, lp["xattn"], apply_norm(cfg, lp["ln_x"], x),
+                    cr["k"], cr["v"])
+                from repro.models.layers import apply_mlp
+                x = x + apply_mlp(cfg, lp["mlp"], apply_norm(cfg, lp["ln2"], x))
+                new_self.append(st2)
+            x = apply_norm(cfg, params["final_norm"], x)
+            w = unembed_matrix(cfg, params).astype(self.act_dtype)
+            return x @ w, {"cross": state["cross"], "self": new_self}
+        x, state = tfm.decode_stack(cfg, params, x, state)
+        x = apply_norm(cfg, params["final_norm"], x)
+        w = unembed_matrix(cfg, params).astype(self.act_dtype)
+        return x @ w, state
+
+    # -- dry-run input specs -------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        emb_dt = self.act_dtype
+
+        def tok(b, s):
+            return jax.ShapeDtypeStruct((b, s), i32)
+
+        if shape.kind == "decode":
+            return {"tokens": tok(B, 1)}
+        if cfg.encoder_decoder:
+            St = S // cfg.decoder_len_ratio
+            d = {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), emb_dt),
+                 "tokens": tok(B, St)}
+            if shape.kind == "train":
+                d["targets"] = tok(B, St)
+            return d
+        if cfg.frontend == "vision":
+            P = cfg.num_prefix_embeds
+            d = {"patches": jax.ShapeDtypeStruct((B, P, cfg.d_model), emb_dt),
+                 "tokens": tok(B, S - P)}
+            if shape.kind == "train":
+                d["targets"] = tok(B, S - P)
+            return d
+        d = {"tokens": tok(B, S)}
+        if shape.kind == "train":
+            d["targets"] = tok(B, S)
+        return d
+
+    def input_axes(self, shape: ShapeConfig):
+        """Logical axes matching input_specs."""
+        cfg = self.cfg
+        ax_tok = ("batch", "seq")
+        ax_emb = ("batch", "seq", "act_embed")
+        specs = self.input_specs(shape)
+        out = {}
+        for k in specs:
+            out[k] = ax_emb if k in ("frames", "patches") else ax_tok
+        return out
+
+    def decode_state_specs(self, shape: ShapeConfig):
+        return jax.eval_shape(
+            lambda: self.init_decode_state(shape.global_batch, shape.seq_len))
+
+
+def _state_dtype(act_dtype):
+    return jnp.bfloat16 if act_dtype == jnp.bfloat16 else jnp.float32
+
+
+def _sinusoid_at(pos, d):
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((d,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang[: (d + 1) // 2]))
+    return pe
+
+
+def build_model(cfg: ModelConfig, **kw) -> Model:
+    return Model(cfg, **kw)

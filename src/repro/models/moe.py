@@ -1,0 +1,250 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity dispatch, shared experts.
+
+TPU adaptation (see DESIGN.md): dispatch/combine are PER-DATA-SHARD local
+scatters/gathers inside ``shard_map`` (no cross-shard token exchange — each
+shard owns its tokens and every shard holds all expert weights with the
+expert hidden dim tensor-parallel over 'model').  The TP contraction is
+reduced with an explicit ``psum('model')``.  FSDP-sharded expert weights are
+all-gathered over 'data' on entry — the same all-gather FSDP performs.
+
+The expert-parallel variant (experts sharded over 'model', all_to_all token
+exchange) is selected with rules=EXPERT_PARALLEL_RULES and implemented in
+``_expert_parallel_ffn`` — used by the §Perf hillclimb.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
+from repro.models.layers import Spec, act_fn
+
+# Capacity rounding granularity (MXU-friendly).
+_CAP_ALIGN = 8
+
+
+def moe_specs(cfg):
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.num_experts
+    s = {
+        "router": Spec((d, E), ("embed_nofsdp", "expert")),
+        "w_gate": Spec((E, d, f), ("expert", "embed", "expert_mlp")),
+        "w_up": Spec((E, d, f), ("expert", "embed", "expert_mlp")),
+        "w_down": Spec((E, f, d), ("expert", "expert_mlp", "embed"), fan_in=f),
+    }
+    if cfg.num_shared_experts > 0:
+        fs = cfg.num_shared_experts * f
+        s["shared"] = {
+            "wi_gate": Spec((d, fs), ("embed", "mlp")),
+            "wi_up": Spec((d, fs), ("embed", "mlp")),
+            "wo": Spec((fs, d), ("mlp", "embed")),
+            "gate": Spec((d, 1), ("embed_nofsdp", None)),
+        }
+    return s
+
+
+def _capacity(T: int, E: int, k: int, cf: float) -> int:
+    c = int(math.ceil(k * T / E * cf))
+    return max(_CAP_ALIGN, (c + _CAP_ALIGN - 1) // _CAP_ALIGN * _CAP_ALIGN)
+
+
+def _route(cfg, router_w, xt):
+    """xt: (T, D) -> gates (T,k), experts (T,k), aux losses."""
+    logits = (xt @ router_w).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss + router z-loss.
+    E = cfg.num_experts
+    me = jnp.mean(probs, 0)                                # mean gate per expert
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=1), 0
+    ) / cfg.num_experts_per_tok                            # fraction routed
+    aux = E * jnp.sum(me * ce)
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, -1) ** 2)
+    return top_p.astype(xt.dtype), top_e, aux, z
+
+
+def _dispatch(xt, top_e, k: int, E: int, C: int):
+    """Scatter tokens into per-expert capacity bins.
+
+    Returns buf (E*C+1, D) [last row = overflow], dst (T*k,), keep (T*k,).
+    """
+    T, D = xt.shape
+    e_flat = top_e.reshape(-1)                             # (T*k,) token-major
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                   # (T*k, E)
+    pos_in_e = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]
+    keep = pos_in_e < C
+    dst = jnp.where(keep, e_flat * C + pos_in_e, E * C)
+    src = jnp.arange(T * k) // k
+    buf = jnp.zeros((E * C + 1, D), xt.dtype).at[dst].set(xt[src])
+    return buf, dst, keep
+
+
+def _expert_ffn(cfg, p, buf, E: int, C: int, axis: Optional[str],
+                gather_axis: Optional[str]):
+    """buf (E*C+1, D) -> (E*C+1, D); TP over `axis` (psum), FSDP gather."""
+    a = act_fn(cfg.act)
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    if gather_axis is not None:  # FSDP all-gather of the embed dim
+        wg = jax.lax.all_gather(wg, gather_axis, axis=1, tiled=True)
+        wu = jax.lax.all_gather(wu, gather_axis, axis=1, tiled=True)
+        wd = jax.lax.all_gather(wd, gather_axis, axis=2, tiled=True)
+    eb = buf[: E * C].reshape(E, C, -1)
+    h = a(jnp.einsum("ecd,edf->ecf", eb, wg)) * jnp.einsum("ecd,edf->ecf", eb, wu)
+    out = jnp.einsum("ecf,efd->ecd", h, wd)
+    if axis is not None:
+        # reduce in the activation dtype: halves the TP all-reduce bytes
+        # vs letting the f32 accumulator ride the wire (§Perf iteration)
+        out = jax.lax.psum(out.astype(buf.dtype), axis)    # TP reduce
+    out = out.reshape(E * C, -1)
+    return jnp.concatenate([out, jnp.zeros_like(out[:1])], 0)
+
+
+def _combine(out_buf, dst, top_p, T: int, k: int):
+    y = out_buf[dst]                                       # (T*k, D); overflow->0
+    y = y * top_p.reshape(-1)[:, None].astype(y.dtype)
+    return y.reshape(T, k, -1).sum(1)
+
+
+def _local_moe(cfg, p, x, model_axis, data_axes_, fsdp_axis):
+    """Body run per data shard. x: (Bl, S, D) with full D."""
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    C = _capacity(T, E, k, cfg.capacity_factor)
+    top_p, top_e, aux, z = _route(cfg, p["router"], xt)
+    buf, dst, keep = _dispatch(xt, top_e, k, E, C)
+    out_buf = _expert_ffn(cfg, p, buf, E, C, model_axis, fsdp_axis)
+    y = _combine(out_buf, dst, top_p, T, k)
+    aux_total = cfg.router_aux_loss * aux + 1e-3 * z
+    if data_axes_:
+        n = 1
+        for ax in data_axes_:
+            aux_total = jax.lax.psum(aux_total, ax)
+            n *= jax.lax.axis_size(ax)
+        aux_total = aux_total / n
+    return y.reshape(B, S, D), aux_total
+
+
+def apply_moe(cfg, p, x, mesh=None, rules=None):
+    """MoE FFN.  Returns (y, aux_loss).  x: (B, S, d_model) GLOBAL."""
+    from repro.parallel import sharding as shd
+
+    shared_y = None
+    if cfg.num_shared_experts > 0:
+        sp = p["shared"]
+        a = act_fn(cfg.act)
+        h = a(x @ sp["wi_gate"]) * (x @ sp["wi_up"])
+        shared_y = (h @ sp["wo"]) * jax.nn.sigmoid(x @ sp["gate"])
+
+    routed_params = {kk: p[kk] for kk in ("router", "w_gate", "w_up", "w_down")}
+
+    if mesh is None:
+        y, aux = _local_moe(cfg, routed_params, x, None, (), None)
+    else:
+        rules = rules or shd.DEFAULT_RULES
+        dp = tuple(a for a in (POD_AXIS, DATA_AXIS) if a in mesh.axis_names)
+        model_in_mesh = MODEL_AXIS in mesh.axis_names and mesh.shape[MODEL_AXIS] > 1
+        expert_parallel = rules.get("expert") == MODEL_AXIS
+        if expert_parallel:
+            return _apply_moe_expert_parallel(cfg, p, x, mesh, rules, shared_y)
+        fsdp = rules.get("embed")
+        fsdp = fsdp if (fsdp in mesh.axis_names and mesh.shape[fsdp] > 1) else None
+
+        def fspec(axes):  # param in_spec from logical axes
+            return shd.spec_for(mesh, axes, rules)
+
+        in_specs = (
+            P(dp if len(dp) > 1 else (dp[0] if dp else None), None, None),
+            {
+                "router": P(),
+                "w_gate": P(None, fsdp, MODEL_AXIS if model_in_mesh else None),
+                "w_up": P(None, fsdp, MODEL_AXIS if model_in_mesh else None),
+                "w_down": P(None, MODEL_AXIS if model_in_mesh else None, fsdp),
+            },
+        )
+        out_specs = (P(dp if len(dp) > 1 else (dp[0] if dp else None), None, None), P())
+        body = functools.partial(
+            _local_moe, cfg,
+            model_axis=MODEL_AXIS if model_in_mesh else None,
+            data_axes_=dp,
+            fsdp_axis=fsdp,
+        )
+        y, aux = jax.shard_map(
+            lambda xx, pp: body(pp, xx),
+            mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )(x, routed_params)
+
+    if shared_y is not None:
+        y = y + shared_y
+    return y, aux
+
+
+# --------------------------------------------------------------------------
+# Expert-parallel variant (§Perf hillclimb): experts sharded over 'model',
+# tokens exchanged with all_to_all.
+# --------------------------------------------------------------------------
+
+def _local_moe_ep(cfg, p, x, model_axis, data_axes_):
+    """Experts sharded over `model_axis`; tokens all_to_all'd to experts."""
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    n_ep = jax.lax.axis_size(model_axis)
+    E_loc = E // n_ep
+    C = _capacity(T, E, k, cfg.capacity_factor)
+    top_p, top_e, aux, z = _route(cfg, p["router"], xt)
+    buf, dst, keep = _dispatch(xt, top_e, k, E, C)          # (E*C+1, D)
+    # all_to_all: each shard sends its C-bin block for experts owned elsewhere.
+    send = buf[: E * C].reshape(n_ep, E_loc * C, D)
+    # recv: (n_ep, E_loc*C, D) where dim0 indexes the SOURCE shard.
+    recv = jax.lax.all_to_all(send, model_axis, split_axis=0, concat_axis=0)
+    eb = recv.reshape(n_ep * E_loc, C, D)  # E_loc experts x n_ep source shards
+    # local expert weights: (E_loc, D, F_full)
+    a = act_fn(cfg.act)
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    eb2 = eb.reshape(n_ep, E_loc, C, D).transpose(1, 0, 2, 3).reshape(E_loc, n_ep * C, D)
+    h = a(jnp.einsum("ecd,edf->ecf", eb2, wg)) * jnp.einsum("ecd,edf->ecf", eb2, wu)
+    out = jnp.einsum("ecf,efd->ecd", h, wd)                 # (E_loc, n_ep*C, D)
+    out = out.reshape(E_loc, n_ep, C, D).transpose(1, 0, 2, 3).reshape(n_ep, E_loc * C, D)
+    back = jax.lax.all_to_all(out, model_axis, split_axis=0, concat_axis=0)
+    out_buf = back.reshape(E * C, D)
+    out_buf = jnp.concatenate([out_buf, jnp.zeros_like(out_buf[:1])], 0)
+    y = _combine(out_buf, dst, top_p, T, k)
+    aux_total = cfg.router_aux_loss * aux + 1e-3 * z
+    for ax in data_axes_:
+        aux_total = jax.lax.psum(aux_total, ax) / jax.lax.axis_size(ax)
+    return y.reshape(B, S, D), aux_total
+
+
+def _apply_moe_expert_parallel(cfg, p, x, mesh, rules, shared_y):
+    dp = tuple(a for a in (POD_AXIS, DATA_AXIS) if a in mesh.axis_names)
+    routed = {kk: p[kk] for kk in ("router", "w_gate", "w_up", "w_down")}
+    in_specs = (
+        P(dp if len(dp) > 1 else (dp[0] if dp else None), None, None),
+        {
+            "router": P(),
+            "w_gate": P(MODEL_AXIS, None, None),
+            "w_up": P(MODEL_AXIS, None, None),
+            "w_down": P(MODEL_AXIS, None, None),
+        },
+    )
+    out_specs = (P(dp if len(dp) > 1 else (dp[0] if dp else None), None, None), P())
+    y, aux = jax.shard_map(
+        lambda xx, pp: _local_moe_ep(cfg, pp, xx, MODEL_AXIS, dp),
+        mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False,
+    )(x, routed)
+    if shared_y is not None:
+        y = y + shared_y
+    return y, aux

@@ -1,0 +1,385 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM (sLSTM/mLSTM).
+
+Training / prefill use ``jax.lax.associative_scan`` for the RG-LRU linear
+recurrence (log-depth on TPU) and ``lax.scan`` for the xLSTM cells (their
+h-recurrence is not associative).  Decode is a single-step state update.
+State layouts are documented next to the init_state helpers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Spec, act_fn, match_vma
+
+_RGLRU_C = 8.0
+
+
+# ==========================================================================
+# RG-LRU recurrent block  [arXiv:2402.19427]
+# ==========================================================================
+
+def rglru_specs(cfg):
+    d = cfg.d_model
+    w = cfg.rglru_conv_width
+    return {
+        "w_main": Spec((d, d), ("embed", "mlp")),
+        "w_gate_branch": Spec((d, d), ("embed", "mlp")),
+        "conv_w": Spec((w, d), ("conv", "act_embed"), fan_in=w),
+        "conv_b": Spec((d,), ("act_embed",), "zeros"),
+        "w_a": Spec((d, d), ("embed", "mlp")),
+        "b_a": Spec((d,), ("act_embed",), "zeros"),
+        "w_x": Spec((d, d), ("embed", "mlp")),
+        "b_x": Spec((d,), ("act_embed",), "zeros"),
+        "lam": Spec((d,), ("act_embed",), "ones"),   # Λ; a = σ(Λ)
+        "w_out": Spec((d, d), ("mlp", "embed")),
+    }
+
+
+def _causal_depthwise_conv(x, w, b, state: Optional[jnp.ndarray] = None):
+    """x: (B,S,D); w: (W,D) depthwise causal.  state: (B,W-1,D) history."""
+    W = w.shape[0]
+    if state is None:
+        hist = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        hist = state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else hist
+    return out + b, new_state
+
+
+def _rglru_gates(p, xi):
+    """Per-step gate computation.  xi: (..., D) conv output."""
+    r = jax.nn.sigmoid(xi @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(xi @ p["w_x"] + p["b_x"])
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r        # a = exp(log_a)
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * xi)
+    return a, gated_x
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t via associative_scan.  a,b: (B,S,D)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_scan_chunked(a, b, chunk: int = 512):
+    """Two-level blocked linear recurrence (perf variant, EXPERIMENTS §Perf).
+
+    ``associative_scan`` materializes O(log2 S) full-size intermediates;
+    this version runs the parallel scan WITHIN chunks and a tiny
+    sequential scan ACROSS the S/chunk chunk carries, so peak temporaries
+    drop from ~log2(S) x (S,D) to ~4 x (S,D):
+
+        h[c,t] = h_within[c,t] + P[c,t] * carry[c-1],
+        carry[c] = a_prod[c] * carry[c-1] + h_within[c,last].
+    """
+    B, S, D = a.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    C = a.shape[1] // chunk
+    ar = a.reshape(B, C, chunk, D)
+    br = b.reshape(B, C, chunk, D)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    # within-chunk: h assuming zero entry state; P = cumulative a-product
+    P, h_within = jax.lax.associative_scan(combine, (ar, br), axis=2)
+
+    def chunk_step(carry, xs):
+        a_prod_c, h_last_c = xs          # (B, D) each
+        new = a_prod_c * carry + h_last_c
+        return new, carry                # emit the ENTRY state of chunk c
+
+    _, entry = jax.lax.scan(
+        chunk_step, jnp.zeros((B, D), a.dtype),
+        (jnp.moveaxis(P[:, :, -1], 1, 0), jnp.moveaxis(h_within[:, :, -1], 1, 0)))
+    entry = jnp.moveaxis(entry, 0, 1)     # (B, C, D) state entering chunk c
+    h = h_within + P * entry[:, :, None, :]
+    h = h.reshape(B, C * chunk, D)
+    return h[:, :S]
+
+
+def apply_rglru(cfg, p, x, impl: str = "assoc", return_state: bool = False):
+    """Full-sequence RG-LRU block.  x: (B,S,D) -> (B,S,D).
+
+    ``return_state=True`` also returns the decode continuation state
+    {"h": final hidden (B,D) fp32, "conv": conv history (B,W-1,D)}.
+    """
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])
+    main = x @ p["w_main"]
+    xi, conv_state = _causal_depthwise_conv(main, p["conv_w"], p["conv_b"])
+    xf = xi.astype(jnp.float32)
+    a, bb = _rglru_gates(p, xf)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        h = kops.rglru_scan(a, bb)
+    elif impl == "chunked":
+        h = rglru_scan_chunked(a, bb)
+    else:
+        h = rglru_scan_ref(a, bb)
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    if return_state:
+        return y, {"h": h[:, -1], "conv": conv_state}
+    return y
+
+
+def rglru_init_state(cfg, batch: int, dtype=jnp.float32):
+    d, w = cfg.d_model, cfg.rglru_conv_width
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "conv": jnp.zeros((batch, w - 1, d), dtype),
+    }
+
+
+def rglru_state_axes():
+    return {"h": ("batch", "act_embed"), "conv": ("batch", None, "act_embed")}
+
+
+def rglru_decode_step(cfg, p, x, state):
+    """x: (B,1,D) one token."""
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])
+    main = x @ p["w_main"]
+    xi, new_conv = _causal_depthwise_conv(main, p["conv_w"], p["conv_b"], state["conv"])
+    xf = xi[:, 0].astype(jnp.float32)
+    a, bb = _rglru_gates(p, xf)
+    h = a * state["h"] + bb
+    y = (h[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    return y, {"h": h, "conv": new_conv}
+
+
+# ==========================================================================
+# xLSTM  [arXiv:2405.04517]
+# ==========================================================================
+
+def mlstm_specs(cfg):
+    d, H = cfg.d_model, cfg.num_heads
+    hd = d // H
+    return {
+        "w_qkv": Spec((d, 3, H, hd), ("embed", None, "heads", "head_dim")),
+        "w_if": Spec((d, 2, H), ("embed", None, "heads")),   # ĩ, f̃ pre-acts
+        "b_if": Spec((2, H), (None, "heads"), "zeros"),
+        "w_gate": Spec((d, d), ("embed", "mlp")),
+        "w_out": Spec((d, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_cell(q, k, v, it, ft, state):
+    """One step.  q,k,v: (B,H,hd); it,ft: (B,H); state: dict(C,n,m)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    C_new = f_p[..., None, None] * C + i_p[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n_new = f_p[..., None] * n + i_p[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.sum(n_new * q, -1)), 1.0)
+    h = jnp.einsum("bhvk,bhk->bhv", C_new, q) / denom[..., None]
+    return h, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def mlstm_init_state(cfg, batch: int):
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_state_axes():
+    return {"C": ("batch", "heads", None, None),
+            "n": ("batch", "heads", None),
+            "m": ("batch", "heads")}
+
+
+def _mlstm_preact(cfg, p, x):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    qkv = jnp.einsum("bsd,dthk->tbshk", x, p["w_qkv"]).astype(jnp.float32)
+    q, k, v = qkv[0], qkv[1] / jnp.sqrt(hd), qkv[2]
+    if_ = jnp.einsum("bsd,dth->tbsh", x, p["w_if"]).astype(jnp.float32) + p["b_if"].astype(jnp.float32)[:, None, None]
+    return q, k, v, if_[0], if_[1]
+
+
+def apply_mlstm(cfg, p, x, state=None):
+    """Full-sequence mLSTM block via lax.scan over time."""
+    B, S, d = x.shape
+    q, k, v, it, ft = _mlstm_preact(cfg, p, x)
+    ft = -jax.nn.softplus(-ft)   # log σ(f̃): forget gate in log space
+    st = match_vma(state or mlstm_init_state(cfg, B), x)
+
+    def step(carry, xs):
+        qs, ks, vs, its, fts = xs
+        h, carry = _mlstm_cell(qs, ks, vs, its, fts, carry)
+        return carry, h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, it, ft))
+    st, hs = jax.lax.scan(step, st, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    out = (h * jax.nn.silu(x @ p["w_gate"])) @ p["w_out"]
+    return out, st
+
+
+def apply_mlstm_chunked(cfg, p, x, state=None, chunk: int = 128):
+    """Chunkwise-parallel mLSTM (perf variant, EXPERIMENTS §Perf).
+
+    The mLSTM recurrence has no hidden-to-gate feedback, so it admits the
+    linear-attention form  h_t = sum_{s<=t} w_{t,s} v_s (k_s . q_t) / denom
+    with  w_{t,s} = exp(F_t - F_s + i_s - m_t),  F = cumsum(log f).
+    Chunking turns the per-token outer-product scan (VPU-bound, S
+    sequential steps) into L x L MXU matmuls per chunk plus a tiny
+    sequential scan over S/L chunk carries — the TPU-native formulation.
+    Exactly equals apply_mlstm (same stabilizer m) up to fp assoc.
+    """
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    q, k, v, it, ft = _mlstm_preact(cfg, p, x)
+    ft = -jax.nn.softplus(-ft)                     # log sigma(f~)
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        # padded steps: f=1 (log 0) keeps F flat, i = -inf kills their keys
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+        it = jnp.pad(it, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        ft = jnp.pad(ft, ((0, 0), (0, pad), (0, 0)))
+    C = q.shape[1] // L
+
+    def rs4(t):
+        return jnp.moveaxis(t.reshape(B, C, L, H, hd), 1, 0)   # (C,B,L,H,hd)
+
+    def rs3(t):
+        return jnp.moveaxis(t.reshape(B, C, L, H), 1, 0)       # (C,B,L,H)
+
+    qs, ks, vs = rs4(q), rs4(k), rs4(v)
+    its, fts = rs3(it), rs3(ft)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    st0 = match_vma(state or mlstm_init_state(cfg, B), x)
+
+    def chunk_step(carry, inp):
+        C_prev, n_prev, m_prev = carry["C"], carry["n"], carry["m"]
+        qc, kc, vc, ic, fc = inp
+        F = jnp.cumsum(fc, axis=1)                         # (B,L,H)
+        u = ic - F                                         # i_s - F_s
+        m_local = jax.lax.cummax(u, axis=1)
+        m_t = jnp.maximum(F + m_prev[:, None], F + m_local)  # (B,L,H)
+        # intra-chunk decay-weighted scores
+        logw = F[:, :, None] + u[:, None, :] - m_t[:, :, None]   # (B,t,s,H)
+        w = jnp.where(causal[None, :, :, None], jnp.exp(logw), 0.0)
+        scores = jnp.einsum("bthk,bshk->btsh", qc, kc)
+        a = w * scores                                     # (B,t,s,H)
+        intra = jnp.einsum("btsh,bshk->bthk", a, vc)
+        # inter-chunk (carry) contribution
+        lam = jnp.exp(F + m_prev[:, None] - m_t)           # (B,L,H)
+        inter = jnp.einsum("bthk,bhvk->bthv", qc, C_prev) * lam[..., None]
+        num = intra + inter
+        n_t = jnp.einsum("btsh,bshk->bthk", w, kc) +             lam[..., None] * n_prev[:, None]
+        denom = jnp.maximum(jnp.abs(jnp.sum(n_t * qc, -1)), 1.0)
+        h = num / denom[..., None]
+        # carry to chunk end
+        Ftot = F[:, -1]                                    # (B,H)
+        m_end = m_t[:, -1]
+        gamma = jnp.exp(Ftot + m_prev - m_end)
+        wv = jnp.exp(Ftot[:, None] + u - m_end[:, None])   # (B,L,H)
+        C_new = gamma[..., None, None] * C_prev +             jnp.einsum("bshv,bshk,bsh->bhvk", vc, kc, wv)
+        n_new = gamma[..., None] * n_prev +             jnp.einsum("bshk,bsh->bhk", kc, wv)
+        return {"C": C_new, "n": n_new, "m": m_end}, h
+
+    st, hs = jax.lax.scan(chunk_step, st0, (qs, ks, vs, its, fts))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, C * L, d)[:, :S].astype(x.dtype)
+    out = (h * jax.nn.silu(x @ p["w_gate"])) @ p["w_out"]
+    return out, st
+
+
+def mlstm_decode_step(cfg, p, x, state):
+    y, st = apply_mlstm(cfg, p, x, state)
+    return y, st
+
+
+def slstm_specs(cfg):
+    d = cfg.d_model
+    H = cfg.slstm_heads or cfg.num_heads
+    hd = d // H
+    f_ffn = int(d * 4 / 3) // 8 * 8
+    return {
+        "w_gates": Spec((d, 4, H, hd), ("embed", None, "heads", "head_dim")),
+        "r_gates": Spec((H, hd, 4, hd), ("heads", "head_dim", None, None), fan_in=hd),
+        "b_gates": Spec((4, H, hd), (None, "heads", "head_dim"), "zeros"),
+        "w_out": Spec((d, d), ("mlp", "embed")),
+        "ffn_wi": Spec((d, f_ffn), ("embed", "mlp")),
+        "ffn_wo": Spec((f_ffn, d), ("mlp", "embed")),
+    }
+
+
+def slstm_init_state(cfg, batch: int):
+    H = cfg.slstm_heads or cfg.num_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}
+
+
+def slstm_state_axes():
+    ax = ("batch", "heads", None)
+    return {"c": ax, "n": ax, "h": ax, "m": ax}
+
+
+def _slstm_cell(p, wx, state):
+    """wx: (B,4,H,hd) input pre-acts; recurrent contribution added here."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhk,hktj->bthj", h, p["r_gates"].astype(jnp.float32))
+    pre = wx + rec + p["b_gates"].astype(jnp.float32)
+    zt = jnp.tanh(pre[:, 0])
+    it = pre[:, 1]
+    ft = -jax.nn.softplus(-pre[:, 2])   # log σ
+    ot = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    c_new = f_p * c + i_p * zt
+    n_new = f_p * n + i_p
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def apply_slstm(cfg, p, x, state=None):
+    B, S, d = x.shape
+    H = cfg.slstm_heads or cfg.num_heads
+    wx = jnp.einsum("bsd,dthj->bsthj", x, p["w_gates"]).astype(jnp.float32)
+    st = match_vma(state or slstm_init_state(cfg, B), x)
+
+    def step(carry, ws):
+        h, carry = _slstm_cell(p, ws, carry)
+        return carry, h
+
+    st, hs = jax.lax.scan(step, st, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = h @ p["w_out"]
+    y = y + act_fn("gelu")(y @ p["ffn_wi"]) @ p["ffn_wo"]
+    return y, st
+
+
+def slstm_decode_step(cfg, p, x, state):
+    y, st = apply_slstm(cfg, p, x, state)
+    return y, st

@@ -1,0 +1,364 @@
+"""Composable transformer stack over the block zoo.
+
+Layer kinds (cfg.layer_kinds): 'attn' (self-attn + MLP/MoE), 'local_attn'
+(windowed attn + MLP), 'rglru' (RG-LRU block + MLP), 'mlstm', 'slstm'.
+Homogeneous 'attn' stacks are layer-scanned (stacked params, lax.scan,
+remat) so an 88-layer model lowers as one block; heterogeneous stacks are
+short and python-looped.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import recurrent as rec
+from repro.models.layers import (
+    Spec, apply_mlp, apply_norm, mlp_specs, norm_specs, stack_specs,
+)
+from repro.models.moe import apply_moe, moe_specs
+
+
+# --------------------------------------------------------------------------
+# Per-layer specs
+# --------------------------------------------------------------------------
+
+def block_specs(cfg, kind: str):
+    s: Dict[str, Any] = {"ln1": norm_specs(cfg)}
+    if kind in ("attn", "local_attn"):
+        s["attn"] = attn.attention_specs(cfg)
+        s["ln2"] = norm_specs(cfg)
+        if cfg.is_moe and kind == "attn":
+            s["moe"] = moe_specs(cfg)
+        else:
+            s["mlp"] = mlp_specs(cfg)
+    elif kind == "rglru":
+        s["rnn"] = rec.rglru_specs(cfg)
+        s["ln2"] = norm_specs(cfg)
+        s["mlp"] = mlp_specs(cfg)
+    elif kind == "mlstm":
+        s["cell"] = rec.mlstm_specs(cfg)
+    elif kind == "slstm":
+        s["cell"] = rec.slstm_specs(cfg)
+    else:
+        raise ValueError(kind)
+    return s
+
+
+def enc_block_specs(cfg):
+    return {
+        "ln1": norm_specs(cfg),
+        "attn": attn.attention_specs(cfg),
+        "ln2": norm_specs(cfg),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def dec_block_specs(cfg):
+    """Decoder block with cross attention (enc-dec archs)."""
+    return {
+        "ln1": norm_specs(cfg),
+        "attn": attn.attention_specs(cfg),
+        "ln_x": norm_specs(cfg),
+        "xattn": attn.cross_attention_specs(cfg),
+        "ln2": norm_specs(cfg),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+# --------------------------------------------------------------------------
+# Per-layer forward (full sequence)
+# --------------------------------------------------------------------------
+
+def _rglru_impl(impl: str) -> str:
+    """Map the model-level impl knob to the RG-LRU scan variant."""
+    return impl if impl in ("pallas", "chunked") else "assoc"
+
+
+def apply_block(cfg, kind, p, x, *, mesh=None, rules=None, impl="xla_flash",
+                constrain=None):
+    """Full-sequence block.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local_attn"):
+        window = cfg.sliding_window if kind == "attn" else cfg.local_window
+        h = attn.self_attention(
+            cfg, p["attn"], apply_norm(cfg, p["ln1"], x),
+            causal=True, window=window, impl=impl, constrain=constrain)
+        x = x + h
+        h2in = apply_norm(cfg, p["ln2"], x)
+        if "moe" in p:
+            h2, aux = apply_moe(cfg, p["moe"], h2in, mesh=mesh, rules=rules)
+        else:
+            h2 = apply_mlp(cfg, p["mlp"], h2in, constrain=constrain)
+        x = x + h2
+    elif kind == "rglru":
+        x = x + rec.apply_rglru(cfg, p["rnn"], apply_norm(cfg, p["ln1"], x),
+                                impl=_rglru_impl(impl))
+        x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x), constrain=constrain)
+    elif kind == "mlstm":
+        fn = rec.apply_mlstm_chunked if impl == "chunked" else rec.apply_mlstm
+        h, _ = fn(cfg, p["cell"], apply_norm(cfg, p["ln1"], x))
+        x = x + h
+    elif kind == "slstm":
+        h, _ = rec.apply_slstm(cfg, p["cell"], apply_norm(cfg, p["ln1"], x))
+        x = x + h
+    else:
+        raise ValueError(kind)
+    if constrain is not None:
+        # sequence-parallel residual stream (no-op under DEFAULT_RULES):
+        # this is the remat-saved layer boundary, so SEQ_PARALLEL_RULES
+        # shard it over the TP axis between layers.
+        x = constrain(x, ("batch", "act_seq", "act_embed"))
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# Per-layer decode (one token, stateful)
+# --------------------------------------------------------------------------
+
+def init_layer_state(cfg, kind, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if kind in ("attn", "local_attn"):
+        window = cfg.sliding_window if kind == "attn" else cfg.local_window
+        W = min(window, max_len) if window > 0 else max_len
+        return attn.init_kv_cache(cfg, batch, W, window=0, dtype=dtype)
+    if kind == "rglru":
+        return rec.rglru_init_state(cfg, batch, dtype=dtype)
+    if kind == "mlstm":
+        return rec.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return rec.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def layer_state_axes(cfg, kind):
+    if kind in ("attn", "local_attn"):
+        return {"k": ("batch", "seq", "kv_heads", "head_dim"),
+                "v": ("batch", "seq", "kv_heads", "head_dim"),
+                "slot_pos": ("seq",), "pos": None}
+    if kind == "rglru":
+        return rec.rglru_state_axes()
+    if kind == "mlstm":
+        return rec.mlstm_state_axes()
+    if kind == "slstm":
+        return rec.slstm_state_axes()
+    raise ValueError(kind)
+
+
+def prefill_block(cfg, kind, p, x, *, cache_len, dtype, impl="xla_flash",
+                  mesh=None, rules=None, constrain=None):
+    """Full-sequence block that also returns the decode state (prefill)."""
+    if kind in ("attn", "local_attn"):
+        window = cfg.sliding_window if kind == "attn" else cfg.local_window
+        h, cache = attn.self_attention_prefill(
+            cfg, p["attn"], apply_norm(cfg, p["ln1"], x),
+            causal=True, window=window, impl=impl, cache_len=cache_len,
+            dtype=dtype, constrain=constrain)
+        x = x + h
+        h2in = apply_norm(cfg, p["ln2"], x)
+        if "moe" in p:
+            h2, _ = apply_moe(cfg, p["moe"], h2in, mesh=mesh, rules=rules)
+        else:
+            h2 = apply_mlp(cfg, p["mlp"], h2in, constrain=constrain)
+        return x + h2, cache
+    if kind == "rglru":
+        h, st = rec.apply_rglru(cfg, p["rnn"], apply_norm(cfg, p["ln1"], x),
+                                impl=_rglru_impl(impl), return_state=True)
+        x = x + h
+        x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x),
+                          constrain=constrain)
+        st["conv"] = st["conv"].astype(dtype)
+        return x, st
+    if kind == "mlstm":
+        fn = rec.apply_mlstm_chunked if impl == "chunked" else rec.apply_mlstm
+        h, st = fn(cfg, p["cell"], apply_norm(cfg, p["ln1"], x))
+        return x + h, st
+    if kind == "slstm":
+        h, st = rec.apply_slstm(cfg, p["cell"], apply_norm(cfg, p["ln1"], x))
+        return x + h, st
+    raise ValueError(kind)
+
+
+def prefill_stack(cfg, p, x, *, cache_len, dtype, impl="xla_flash",
+                  mesh=None, rules=None, constrain=None):
+    """Full-sequence stack returning (x, decode_state) — the prefill path.
+
+    Layer-python-looped even for homogeneous stacks (prefill is one-shot;
+    L <= 88 unrolled layers is acceptable and lets each layer's cache be
+    collected).
+    """
+    kinds = cfg.layer_kinds
+    states = []
+    if cfg.homogeneous:
+        # layer-scanned prefill: per-layer caches come out as scan outputs,
+        # so the HLO stays one-block even at 88 layers.
+        def scan_body(h, layer_p):
+            h, st = prefill_block(cfg, "attn", layer_p, h,
+                                  cache_len=cache_len, dtype=dtype,
+                                  impl=impl, mesh=mesh, rules=rules,
+                                  constrain=constrain)
+            return h, st
+
+        x, stacked = jax.lax.scan(scan_body, x, p["scanned"])
+        return x, {"scanned": stacked}
+    for kind, lp in zip(kinds, p["layers"]):
+        x, st = prefill_block(cfg, kind, lp, x, cache_len=cache_len,
+                              dtype=dtype, impl=impl, mesh=mesh, rules=rules,
+                              constrain=constrain)
+        states.append(st)
+    return x, {"layers": states}
+
+
+def decode_block(cfg, kind, p, x, state):
+    if kind in ("attn", "local_attn"):
+        window = cfg.sliding_window if kind == "attn" else cfg.local_window
+        h, state = attn.decode_self_attention(
+            cfg, p["attn"], apply_norm(cfg, p["ln1"], x), state, window=window)
+        x = x + h
+        h2in = apply_norm(cfg, p["ln2"], x)
+        if "moe" in p:
+            h2, _ = apply_moe(cfg, p["moe"], h2in, mesh=None)
+        else:
+            h2 = apply_mlp(cfg, p["mlp"], h2in)
+        x = x + h2
+    elif kind == "rglru":
+        h, st = rec.rglru_decode_step(cfg, p["rnn"], apply_norm(cfg, p["ln1"], x), state)
+        x = x + h
+        x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+        state = st
+    elif kind == "mlstm":
+        h, state = rec.mlstm_decode_step(cfg, p["cell"], apply_norm(cfg, p["ln1"], x), state)
+        x = x + h
+    elif kind == "slstm":
+        h, state = rec.slstm_decode_step(cfg, p["cell"], apply_norm(cfg, p["ln1"], x), state)
+        x = x + h
+    else:
+        raise ValueError(kind)
+    return x, state
+
+
+# --------------------------------------------------------------------------
+# Stack
+# --------------------------------------------------------------------------
+
+def stack_specs_tree(cfg):
+    kinds = cfg.layer_kinds
+    if cfg.homogeneous:
+        return {"scanned": stack_specs(block_specs(cfg, "attn"), cfg.num_layers)}
+    return {"layers": [block_specs(cfg, k) for k in kinds]}
+
+
+def apply_stack(cfg, p, x, *, mesh=None, rules=None, impl="xla_flash",
+                constrain=None, remat=True):
+    """Full-sequence stack.  Returns (x, aux)."""
+    kinds = cfg.layer_kinds
+    if cfg.homogeneous:
+        body = functools.partial(
+            apply_block, cfg, "attn", mesh=mesh, rules=rules, impl=impl,
+            constrain=constrain)
+
+        def scan_body(carry, layer_p):
+            h, aux = carry
+            h, a = body(layer_p, h)
+            return (h, aux + a), None
+
+        if remat:
+            scan_body = jax.checkpoint(scan_body)
+        from repro.models.layers import match_vma
+        (x, aux), _ = jax.lax.scan(
+            scan_body, (x, match_vma(jnp.zeros((), jnp.float32), x)),
+                                   p["scanned"])
+        return x, aux
+    aux = jnp.zeros((), jnp.float32)
+    for kind, lp in zip(kinds, p["layers"]):
+        fn = functools.partial(apply_block, cfg, kind, mesh=mesh, rules=rules,
+                               impl=impl, constrain=constrain)
+        if remat:
+            fn = jax.checkpoint(fn)
+        x, a = fn(lp, x)
+        aux = aux + a
+    return x, aux
+
+
+def init_stack_state(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    kinds = cfg.layer_kinds
+    if cfg.homogeneous:
+        one = lambda: init_layer_state(cfg, "attn", batch, max_len, dtype)
+        states = [one() for _ in range(cfg.num_layers)]
+        return {"scanned": jax.tree.map(lambda *xs: jnp.stack(xs), *states)}
+    return {"layers": [init_layer_state(cfg, k, batch, max_len, dtype) for k in kinds]}
+
+
+def stack_state_axes(cfg):
+    kinds = cfg.layer_kinds
+    if cfg.homogeneous:
+        ax = layer_state_axes(cfg, "attn")
+        return {"scanned": jax.tree.map(
+            lambda a: ("layer",) + a if isinstance(a, tuple) else ("layer",),
+            ax, is_leaf=lambda v: isinstance(v, tuple) or v is None)}
+    return {"layers": [layer_state_axes(cfg, k) for k in kinds]}
+
+
+def decode_stack(cfg, p, x, state):
+    """One-token decode through the stack.  Returns (x, new_state)."""
+    kinds = cfg.layer_kinds
+    if cfg.homogeneous:
+        def scan_body(h, xs):
+            layer_p, layer_s = xs
+            h, new_s = decode_block(cfg, "attn", layer_p, h, layer_s)
+            return h, new_s
+
+        x, new_states = jax.lax.scan(scan_body, x, (p["scanned"], state["scanned"]))
+        return x, {"scanned": new_states}
+    new_states = []
+    for kind, lp, ls in zip(kinds, p["layers"], state["layers"]):
+        x, ns = decode_block(cfg, kind, lp, x, ls)
+        new_states.append(ns)
+    return x, {"layers": new_states}
+
+
+# --------------------------------------------------------------------------
+# Encoder-decoder (whisper-style)
+# --------------------------------------------------------------------------
+
+def encdec_specs_tree(cfg):
+    return {
+        "encoder": [enc_block_specs(cfg) for _ in range(cfg.num_encoder_layers)],
+        "enc_norm": norm_specs(cfg),
+        "decoder": [dec_block_specs(cfg) for _ in range(cfg.num_layers)],
+    }
+
+
+def apply_encoder(cfg, p, frames, *, impl="xla_flash", constrain=None, remat=True):
+    from repro.models.layers import sinusoidal_positions
+    x = frames + sinusoidal_positions(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    for lp in p["encoder"]:
+        def blk(lp_, h):
+            a = attn.self_attention(cfg, lp_["attn"], apply_norm(cfg, lp_["ln1"], h),
+                                    causal=False, impl=impl, constrain=constrain)
+            h = h + a
+            return h + apply_mlp(cfg, lp_["mlp"], apply_norm(cfg, lp_["ln2"], h),
+                                 constrain=constrain)
+        fn = jax.checkpoint(blk) if remat else blk
+        x = fn(lp, x)
+    return apply_norm(cfg, p["enc_norm"], x)
+
+
+def apply_decoder(cfg, p, x, enc_out, *, impl="xla_flash", constrain=None,
+                  remat=True):
+    for lp in p["decoder"]:
+        def blk(lp_, h):
+            a = attn.self_attention(cfg, lp_["attn"], apply_norm(cfg, lp_["ln1"], h),
+                                    causal=True, impl=impl, constrain=constrain)
+            h = h + a
+            kx, vx = attn.encode_kv(cfg, lp_["xattn"], enc_out)
+            h = h + attn.cross_attention(cfg, lp_["xattn"],
+                                         apply_norm(cfg, lp_["ln_x"], h), kx, vx,
+                                         impl=impl)
+            return h + apply_mlp(cfg, lp_["mlp"], apply_norm(cfg, lp_["ln2"], h),
+                                 constrain=constrain)
+        fn = jax.checkpoint(blk) if remat else blk
+        x = fn(lp, x)
+    return x

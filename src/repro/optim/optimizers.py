@@ -1,0 +1,76 @@
+"""Minimal optimizer library (optax-style pure functions).
+
+States are pytrees matching the param tree so sharding rules transfer
+leaf-for-leaf (FSDP shards optimizer state exactly like its param).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (new_params, new_state)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        if momentum == 0.0:
+            new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+            return new, ()
+        vel = jax.tree.map(lambda v, g: momentum * v + g.astype(v.dtype), state, grads)
+        new = jax.tree.map(lambda p, v: p - lr * v.astype(p.dtype), params, vel)
+        return new, vel
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state["nu"], grads)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, mu, nu)
+        return new, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def opt_state_axes(params_axes, state):
+    """Logical axes for an optimizer state pytree (mirrors param axes)."""
+    if state == () or state is None:
+        return ()
+    if isinstance(state, dict) and "mu" in state:
+        return {"mu": params_axes, "nu": params_axes, "step": None}
+    return params_axes

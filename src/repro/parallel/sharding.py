@@ -1,0 +1,147 @@
+"""Logical-axis sharding rules (MaxText-style, minimal).
+
+Model code annotates every parameter leaf with a tuple of LOGICAL axis names
+(parallel pytree produced at init).  A rules table maps logical axes to mesh
+axes; ``logical_to_sharding`` turns the annotation tree into NamedShardings
+for pjit in/out_shardings, and ``constrain`` applies activation constraints.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
+
+# Default rules: FSDP over 'data', TP over 'model', DP over 'pod'.
+# Params are sharded over 'data' (FSDP) on their largest non-TP dim and over
+# 'model' on the TP dim; the 'pod' axis only replicates params (cloud rounds
+# own it in the HFL schedule).
+DEFAULT_RULES = {
+    "batch": (POD_AXIS, DATA_AXIS),
+    "seq": None,
+    "embed": DATA_AXIS,        # FSDP dim
+    "embed_nofsdp": None,
+    "vocab": MODEL_AXIS,
+    "mlp": MODEL_AXIS,
+    "heads": MODEL_AXIS,
+    "kv_heads": MODEL_AXIS,
+    "head_dim": None,
+    "expert": None,            # baseline: experts replicated, TP inside
+    "expert_mlp": MODEL_AXIS,
+    "layer": None,
+    "conv": None,
+    "state": None,
+    "act_embed": None,         # activation d_model dim
+    "act_heads": MODEL_AXIS,   # activation heads dim
+    "act_seq": None,           # residual-stream seq dim between layers
+}
+
+# Variant rule-sets used by perf hillclimbing (EXPERIMENTS.md §Perf).
+EXPERT_PARALLEL_RULES = dict(
+    DEFAULT_RULES, expert=MODEL_AXIS, expert_mlp=None
+)
+NO_FSDP_RULES = dict(DEFAULT_RULES, embed=None)
+SEQ_SHARDED_RULES = dict(DEFAULT_RULES, seq=DATA_AXIS)
+# Megatron-style sequence parallelism for the residual stream: the saved
+# layer-boundary activation (the remat carry) shards its seq dim over the
+# TP axis; XLA inserts the all-gather before attention and the
+# reduce-scatter after the MLP.  Cuts per-device activation memory ~16x.
+SEQ_PARALLEL_RULES = dict(DEFAULT_RULES, act_seq=MODEL_AXIS)
+# ZeRO-3 / pure-FSDP: batch over BOTH mesh axes (256-way DP), params stay
+# sharded exactly as DEFAULT (data x model covers every leaf), activations
+# carry no TP dims.  Every matmul all-gathers its layer weights once per
+# pass instead of all-reducing activations twice per layer — trades the
+# O(B*S*D) TP all-reduces for O(params) gathers, a win when
+# params/pass < B*S*D*layers (big-batch training).
+PURE_FSDP_RULES = dict(DEFAULT_RULES, batch=(POD_AXIS, DATA_AXIS, MODEL_AXIS),
+                       act_heads=None, act_seq=None)
+# Decode-time KV-cache sharding: kv_heads (8) cannot divide the 16-way
+# model axis, so DEFAULT replicates the cache over 'model' (16x memory).
+# Shard the cache SEQUENCE dim instead — each model shard owns W/16 ring
+# slots; attention over the sharded axis costs one tiny psum of the
+# (B,K,g) softmax stats per step.
+KV_SEQ_SHARDED_RULES = dict(DEFAULT_RULES, seq=MODEL_AXIS)
+
+
+def _axes_for(mesh, logical: tuple, rules) -> P:
+    mesh_axes = []
+    used = set()
+    for name in logical:
+        ax = rules.get(name)
+        if ax is None:
+            mesh_axes.append(None)
+            continue
+        cand = ax if isinstance(ax, tuple) else (ax,)
+        cand = tuple(a for a in cand if a in mesh.axis_names and a not in used)
+        if not cand:
+            mesh_axes.append(None)
+        else:
+            used.update(cand)
+            mesh_axes.append(cand if len(cand) > 1 else cand[0])
+    while mesh_axes and mesh_axes[-1] is None:
+        mesh_axes.pop()
+    return P(*mesh_axes)
+
+
+def spec_for(mesh, logical: Optional[tuple], rules=None) -> P:
+    """PartitionSpec for one logical-axes annotation; validates divisibility
+    lazily (GSPMD requires even division, enforced in logical_to_sharding)."""
+    rules = rules or DEFAULT_RULES
+    if logical is None:
+        return P()
+    return _axes_for(mesh, logical, rules)
+
+
+def _shard_fits(mesh, spec: P, shape) -> P:
+    """Drop mesh axes whose size does not divide the corresponding dim."""
+    fixed = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            fixed.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep = []
+        size = shape[i]
+        for a in axes:
+            n = mesh.shape[a]
+            if size % n == 0 and n > 1:
+                keep.append(a)
+                size //= n
+        fixed.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    while fixed and fixed[-1] is None:
+        fixed.pop()
+    return P(*fixed)
+
+
+def logical_to_sharding(mesh, logical_tree, shape_tree=None, rules=None):
+    """Map a pytree of logical-axes tuples to NamedShardings.
+
+    If ``shape_tree`` (matching pytree of ShapeDtypeStructs/arrays) is given,
+    axes that do not divide evenly are dropped per-leaf instead of erroring —
+    needed for e.g. 8 experts on a 16-way model axis or kv_heads < model.
+    """
+    rules = rules or DEFAULT_RULES
+
+    def one(logical, leaf=None):
+        spec = spec_for(mesh, logical, rules)
+        if leaf is not None:
+            spec = _shard_fits(mesh, spec, leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    if shape_tree is None:
+        return jax.tree.map(one, logical_tree, is_leaf=lambda x: x is None or isinstance(x, tuple))
+    return jax.tree.map(
+        lambda lg, lf: one(lg, lf),
+        logical_tree,
+        shape_tree,
+        is_leaf=lambda x: x is None or (isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)),
+    )
+
+
+def constrain(x, mesh, logical: tuple, rules=None):
+    """with_sharding_constraint via logical axes (no-op off-mesh dims)."""
+    rules = rules or DEFAULT_RULES
+    spec = _shard_fits(mesh, spec_for(mesh, logical, rules), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,65 @@
+"""Sub-problem II association tests: validity, optimality vs exhaustive."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import assoc, delay
+from repro.core.problem import HFLProblem
+
+
+@given(seed=st.integers(0, 20), m=st.integers(2, 6), n=st.integers(4, 40))
+@settings(max_examples=25, deadline=None)
+def test_all_strategies_valid(seed, m, n):
+    p = HFLProblem(num_edges=m, num_ues=n, seed=seed)
+    cap = assoc.capacity_of(p)
+    for name, fn in assoc.STRATEGIES.items():
+        A = fn(p, seed=seed)
+        assert A.shape == (n, m)
+        assert (A.sum(1) == 1).all(), name
+        assert (A.sum(0) <= cap).all(), name
+
+
+def test_proposed_beats_random_on_average():
+    wins = 0
+    for seed in range(10):
+        p = HFLProblem(num_edges=4, num_ues=60, seed=seed)
+        lp = delay.association_latency(p, assoc.proposed(p), 10)
+        lr = delay.association_latency(p, assoc.random_assoc(p, seed), 10)
+        wins += lp <= lr
+    assert wins >= 7
+
+
+def test_refined_never_worse_than_proposed():
+    for seed in range(8):
+        p = HFLProblem(num_edges=5, num_ues=40, seed=seed)
+        lp = delay.association_latency(p, assoc.proposed(p), 10)
+        lref = delay.association_latency(p, assoc.refined(p, a=10), 10)
+        assert lref <= lp + 1e-9
+
+
+def test_refined_near_exhaustive_small():
+    """On tiny instances the refined search lands within 10% of exact."""
+    for seed in range(4):
+        p = HFLProblem(num_edges=2, num_ues=7, seed=seed)
+        ex = assoc.exhaustive(p, a=5.0)
+        le = delay.association_latency(p, ex, 5.0)
+        lr = delay.association_latency(p, assoc.refined(p, a=5.0), 5.0)
+        assert lr <= le * 1.10, (seed, lr, le)
+
+
+def test_exhaustive_is_lower_bound():
+    p = HFLProblem(num_edges=2, num_ues=6, seed=1)
+    le = delay.association_latency(p, assoc.exhaustive(p, a=5.0), 5.0)
+    for name, fn in assoc.STRATEGIES.items():
+        l = delay.association_latency(p, fn(p, seed=0), 5.0)
+        assert le <= l + 1e-9, name
+
+
+def test_greedy_prefers_snr():
+    p = HFLProblem(num_edges=3, num_ues=30, seed=0)
+    A = assoc.greedy(p)
+    snr = p.snr()
+    # edge 0 got the single best-SNR UE for edge 0
+    best = int(np.argmax(snr[:, 0]))
+    assert A[best, 0] == 1

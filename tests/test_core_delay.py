@@ -1,0 +1,78 @@
+"""Unit + property tests for the delay model and convergence counts."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import assoc, delay
+from repro.core.problem import HFLProblem
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return HFLProblem(num_edges=4, num_ues=24, epsilon=0.25, seed=0)
+
+
+def test_iteration_count_formulas_invert(prob):
+    # eq. (2) <-> theta_of_a and eq. (7) <-> mu_of_b are inverses
+    for theta in (0.1, 0.5, 0.9):
+        a = delay.local_iterations(theta, prob.zeta)
+        assert np.isclose(delay.theta_of_a(a, prob.zeta), theta)
+    theta = 0.3
+    a = delay.local_iterations(theta, prob.zeta)
+    for mu in (0.1, 0.5, 0.9):
+        b = delay.edge_iterations(mu, theta, prob.gamma)
+        assert np.isclose(delay.mu_of_b(a, b, prob.zeta, prob.gamma), mu)
+
+
+@given(a=st.floats(0.5, 100), b=st.floats(0.5, 100))
+@settings(max_examples=60, deadline=None)
+def test_cloud_rounds_positive_and_monotone(a, b):
+    """R > 0; R decreases in both a and b (more local work, fewer rounds)."""
+    kw = dict(epsilon=0.25, zeta=5.0, gamma=5.0, big_c=1.0)
+    r = delay.cloud_rounds(a, b, **kw)
+    assert r > 0
+    assert delay.cloud_rounds(a * 1.1, b, **kw) <= r + 1e-9
+    assert delay.cloud_rounds(a, b * 1.1, **kw) <= r + 1e-9
+
+
+@given(eps=st.floats(0.01, 0.9))
+@settings(max_examples=30, deadline=None)
+def test_cloud_rounds_monotone_in_eps(eps):
+    kw = dict(zeta=5.0, gamma=5.0, big_c=1.0)
+    r1 = delay.cloud_rounds(10, 5, epsilon=eps, **kw)
+    r2 = delay.cloud_rounds(10, 5, epsilon=eps / 2, **kw)
+    assert r2 > r1  # tighter accuracy -> more rounds
+
+
+def test_tau_is_max_over_members(prob):
+    A = assoc.proposed(prob)
+    a = 7
+    tau = delay.edge_round_time(prob, A, a)
+    per_ue = a * prob.t_cmp() + prob.t_com(A)
+    for m in range(prob.num_edges):
+        members = A[:, m] > 0
+        if members.any():
+            assert np.isclose(tau[m], per_ue[members].max())
+
+
+def test_objective_breakdown_consistent(prob):
+    A = assoc.proposed(prob)
+    bd = delay.objective_breakdown(prob, A, 10, 3)
+    assert np.isclose(bd["total"], bd["R"] * bd["T"])
+    assert bd["T"] >= 3 * bd["tau"].max()  # T includes backhaul
+    assert 0 < bd["theta"] < 1 and 0 < bd["mu"] < 1
+
+
+def test_rate_decreases_with_crowding(prob):
+    """Equal-split bandwidth: more UEs on an edge -> lower per-UE rate."""
+    r1 = prob.rate(np.full(prob.num_edges, 1))
+    r10 = prob.rate(np.full(prob.num_edges, 10))
+    assert (r10 < r1).all()
+
+
+def test_snr_falls_with_distance(prob):
+    # the farthest UE-edge pair has lower gain than the closest
+    d = np.linalg.norm(prob.ue_pos[:, None] - prob.edge_pos[None], axis=-1)
+    g = prob.gains
+    assert g.flat[np.argmin(d)] > g.flat[np.argmax(d)]

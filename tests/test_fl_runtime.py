@@ -1,0 +1,131 @@
+"""FL runtime tests: aggregation correctness, Alg. 1 convergence, backends."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import schedule
+from repro.core.problem import HFLProblem
+from repro.data import partition, synthetic
+from repro.fl import aggregate, clients
+from repro.fl.sim import HFLSimulator
+from repro.models import lenet
+
+
+def _tree(rng, n):
+    return {"w": jnp.asarray(rng.normal(0, 1, (n, 4, 3)), jnp.float32),
+            "b": jnp.asarray(rng.normal(0, 1, (n, 5)), jnp.float32)}
+
+
+def test_weighted_average_matches_numpy():
+    rng = np.random.default_rng(0)
+    n = 7
+    st_tree = _tree(rng, n)
+    w = rng.uniform(1, 10, n)
+    lst = [jax.tree.map(lambda x: x[i], st_tree) for i in range(n)]
+    out = aggregate.weighted_average(lst, w)
+    ref = jax.tree.map(
+        lambda x: jnp.einsum("n,n...->...", jnp.asarray(w / w.sum(),
+                                                        jnp.float32), x),
+        st_tree)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+@given(n=st.integers(2, 12), groups=st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_stacked_edge_aggregation_segments(n, groups):
+    rng = np.random.default_rng(n * 31 + groups)
+    tree = _tree(rng, n)
+    w = jnp.asarray(rng.uniform(1, 5, n), jnp.float32)
+    gid = jnp.asarray(rng.integers(0, groups, n), jnp.int32)
+    out = aggregate.stacked_weighted_average(tree, w, group_ids=gid,
+                                             num_groups=groups)
+    for leaf, o in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        leaf = np.asarray(leaf)
+        o = np.asarray(o)
+        for g in range(groups):
+            m = np.asarray(gid) == g
+            if not m.any():
+                continue
+            ref = np.einsum("n,n...->...", np.asarray(w)[m] / np.asarray(w)[m].sum(),
+                            leaf[m])
+            for i in np.flatnonzero(m):
+                np.testing.assert_allclose(o[i], ref, rtol=1e-5, atol=1e-6)
+
+
+def test_cloud_aggregation_broadcasts_global_mean():
+    rng = np.random.default_rng(1)
+    tree = _tree(rng, 5)
+    w = jnp.asarray(rng.uniform(1, 5, 5), jnp.float32)
+    out = aggregate.stacked_weighted_average(tree, w)
+    for leaf in jax.tree.leaves(out):
+        # all replicas identical after cloud aggregation
+        assert np.allclose(np.asarray(leaf), np.asarray(leaf)[0:1], atol=1e-6)
+
+
+def test_gd_local_steps_descends():
+    data = synthetic.logreg_data(seed=0, n=200, dim=8, num_classes=3)
+    batch = jax.tree.map(jnp.asarray, data)
+    p0 = lenet.logreg_init(jax.random.PRNGKey(0), 8, 3)
+    loss_fn = lambda p, b: lenet.logreg_loss(p, b, l2=1e-3)
+    run = clients.gd_local_steps(loss_fn, 20, 0.05)
+    p1 = run(p0, batch)
+    assert loss_fn(p1, batch)[0] < loss_fn(p0, batch)[0]
+
+
+def test_dane_descends():
+    data = synthetic.logreg_data(seed=0, n=200, dim=8, num_classes=3)
+    batch = jax.tree.map(jnp.asarray, data)
+    p0 = lenet.logreg_init(jax.random.PRNGKey(0), 8, 3)
+    loss_fn = lambda p, b: lenet.logreg_loss(p, b, l2=1e-3)
+    g_bar = jax.grad(lambda q: loss_fn(q, batch)[0])(p0)
+    run = clients.dane_local_steps(loss_fn, 20, 0.05)
+    p1 = run(p0, batch, g_bar)
+    assert loss_fn(p1, batch)[0] < loss_fn(p0, batch)[0]
+
+
+@pytest.fixture(scope="module")
+def sim_setup():
+    prob = HFLProblem(num_edges=2, num_ues=8, epsilon=0.25, seed=0,
+                      samples_lo=50, samples_hi=120)
+    sch = schedule.plan(prob)
+    train = synthetic.logreg_data(seed=0, n=800, dim=12, num_classes=4)
+    test = synthetic.logreg_data(seed=1, n=200, dim=12, num_classes=4)
+    rng = np.random.default_rng(0)
+    parts = partition.size_partition(rng, 800, prob.samples.astype(int))
+    ue_data = [{k: train[k][ix] for k in train} for ix in parts]
+    init = lenet.logreg_init(jax.random.PRNGKey(0), 12, 4)
+    return sch, init, ue_data, test
+
+
+def test_simulator_converges_gd(sim_setup):
+    sch, init, ue_data, test = sim_setup
+    loss_fn = lambda p, b: lenet.logreg_loss(p, b, l2=1e-3)
+    sim = HFLSimulator(sch, loss_fn, init, ue_data, lr=0.02)
+    res = sim.run(test, rounds=6)
+    assert res.test_acc[-1] > 0.9
+    assert np.all(np.isfinite(res.test_loss))
+    # clock advances by exactly T per cloud round
+    np.testing.assert_allclose(np.diff(res.times), sch.cloud_round_time,
+                               rtol=1e-9)
+
+
+def test_simulator_converges_dane(sim_setup):
+    sch, init, ue_data, test = sim_setup
+    loss_fn = lambda p, b: lenet.logreg_loss(p, b, l2=1e-3)
+    sim = HFLSimulator(sch, loss_fn, init, ue_data, lr=0.02, solver="dane")
+    res = sim.run(test, rounds=6)
+    assert res.test_acc[-1] > 0.9
+
+
+def test_dirichlet_partition_covers():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 500)
+    parts = partition.dirichlet_partition(rng, labels, 8, alpha=0.5)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 500
+    assert len(np.unique(allidx)) == 500
+    assert min(len(p) for p in parts) >= 2

@@ -1,0 +1,56 @@
+"""SPMD backend == simulation backend, run in a subprocess with 8 devices.
+
+The pytest process keeps 1 CPU device (see conftest); shard_map group
+semantics need real multiple devices, so this test shells out.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, sys.argv[1])
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.data import synthetic, partition
+    from repro.models import lenet
+    from repro.fl import aggregate, clients
+    from repro.fl.spmd import make_hfl_cloud_round, stack_for_mesh
+    from repro.launch.mesh import make_fl_mesh
+
+    train = synthetic.logreg_data(seed=0, n=800, dim=16, num_classes=4)
+    init = lenet.logreg_init(jax.random.PRNGKey(0), 16, 4)
+    loss_fn = lambda prm, b: lenet.logreg_loss(prm, b, l2=1e-3)
+    E, U = 2, 4
+    rng = np.random.default_rng(0)
+    parts = partition.iid_partition(rng, 800, E*U)
+    batches = {k: jnp.stack([train[k][ix] for ix in parts]) for k in train}
+    weights = jnp.arange(1., E*U+1.)
+    mesh = make_fl_mesh(E, U)
+    a, b, lr = 4, 2, 0.02
+    fn = make_hfl_cloud_round(loss_fn, mesh, a=a, b=b, lr=lr)
+    out = fn(stack_for_mesh(init, E, U), batches, weights)
+    gid = jnp.repeat(jnp.arange(E), U)
+    p = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (E*U,)+x.shape), init)
+    local = clients.gd_local_steps(loss_fn, a, lr)
+    for _ in range(b):
+        p = jax.vmap(local)(p, batches)
+        p = aggregate.stacked_weighted_average(p, weights, group_ids=gid, num_groups=E)
+    p = aggregate.stacked_weighted_average(p, weights)
+    err = max(float(jnp.max(jnp.abs(x - y)))
+              for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(p)))
+    assert err < 1e-5, err
+    print("OK", err)
+""")
+
+
+@pytest.mark.slow
+def test_spmd_equals_simulation():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT, src],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout

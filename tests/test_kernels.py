@@ -1,0 +1,193 @@
+"""Per-kernel allclose vs the ref.py oracles — shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def arr(*s, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(0, 1, s), dtype)
+
+
+ATTN_CASES = [
+    # B, Sq, Sk, H, K, hd, causal, window
+    (2, 128, 128, 8, 4, 64, True, 0),
+    (1, 256, 256, 4, 4, 32, True, 64),
+    (2, 100, 100, 8, 2, 64, True, 0),       # ragged seq
+    (1, 1, 384, 8, 8, 64, True, 0),         # decode
+    (1, 1, 250, 4, 2, 32, True, 0),         # decode ragged
+    (1, 1, 512, 4, 4, 64, True, 128),       # decode + window
+    (2, 64, 64, 8, 1, 128, True, 0),        # MQA
+    (1, 192, 192, 6, 3, 32, True, 48),      # SWA train
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES, ids=lambda c: "-".join(map(str, c)))
+def test_flash_attention_allclose(case):
+    B, Sq, Sk, H, K, hd, causal, window = case
+    q, k, v = arr(B, Sq, H, hd), arr(B, Sk, K, hd), arr(B, Sk, K, hd)
+    o = ops.flash_attention(q, k, v, causal=causal, window=window)
+    r = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = arr(2, 128, 8, 64).astype(jnp.bfloat16)
+    k = arr(2, 128, 4, 64).astype(jnp.bfloat16)
+    v = arr(2, 128, 4, 64).astype(jnp.bfloat16)
+    o = ops.flash_attention(q, k, v)
+    r = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=3e-2)
+    assert o.dtype == jnp.bfloat16
+
+
+@given(sq=st.integers(1, 80), hd=st.sampled_from([16, 32, 64]),
+       kk=st.sampled_from([1, 2, 4]))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_property(sq, hd, kk):
+    q, k, v = arr(1, sq, 4, hd), arr(1, sq, kk, hd), arr(1, sq, kk, hd)
+    o = ops.flash_attention(q, k, v, causal=True)
+    r = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=3e-5, atol=3e-5)
+
+
+RGLRU_CASES = [(2, 64, 128), (1, 300, 96), (3, 17, 8), (1, 512, 256)]
+
+
+@pytest.mark.parametrize("case", RGLRU_CASES, ids=lambda c: "-".join(map(str, c)))
+def test_rglru_scan_allclose(case):
+    B, S, D = case
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, (B, S, D)), jnp.float32)
+    b = arr(B, S, D)
+    h = ops.rglru_scan(a, b)
+    r = ref.rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_first_step_is_b0():
+    a = jnp.asarray(RNG.uniform(0.5, 0.9, (1, 8, 16)), jnp.float32)
+    b = arr(1, 8, 16)
+    h = ops.rglru_scan(a, b)
+    np.testing.assert_allclose(np.asarray(h[:, 0]), np.asarray(b[:, 0]),
+                               rtol=1e-6)
+
+
+AGG_CASES = [(8, (1000,)), (33, (7, 13)), (600, (256,)), (4, (3, 5, 7)),
+             (1030, (64,)), (2, (1,))]
+
+
+@pytest.mark.parametrize("case", AGG_CASES,
+                         ids=lambda c: f"N{c[0]}-{'x'.join(map(str, c[1]))}")
+def test_hier_aggregate_allclose(case):
+    N, shape = case
+    x = arr(N, *shape)
+    w = jnp.asarray(RNG.uniform(1, 10, N), jnp.float32)
+    o = ops.hier_aggregate(x, w)
+    r = ref.hier_aggregate_ref(x, w)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=1e-5, atol=5e-5)
+
+
+@given(n=st.integers(2, 40), f=st.integers(1, 300))
+@settings(max_examples=15, deadline=None)
+def test_hier_aggregate_property(n, f):
+    """Weighted mean of identical rows is the row; convexity bound holds."""
+    row = arr(f)
+    x = jnp.broadcast_to(row[None], (n, f))
+    w = jnp.asarray(RNG.uniform(0.5, 3.0, n), jnp.float32)
+    o = ops.hier_aggregate(x, w)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(row), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_hier_aggregate_matches_fl_aggregate():
+    """The kernel path and the runtime's jnp path agree."""
+    from repro.fl.aggregate import stacked_weighted_average
+    x = arr(6, 40)
+    w = jnp.asarray(RNG.uniform(1, 5, 6), jnp.float32)
+    a = stacked_weighted_average({"p": x}, w, use_kernel=True)["p"]
+    b = stacked_weighted_average({"p": x}, w, use_kernel=False)["p"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+RGLRU_CHUNK_CASES = [(2, 64, 16, 16), (1, 300, 8, 64), (2, 1024, 4, 512),
+                     (1, 100, 4, 256)]
+
+
+@pytest.mark.parametrize("case", RGLRU_CHUNK_CASES,
+                         ids=lambda c: "-".join(map(str, c)))
+def test_rglru_chunked_scan_allclose(case):
+    """Perf variant (EXPERIMENTS §Perf): two-level scan == oracle."""
+    from repro.models.recurrent import rglru_scan_chunked, rglru_scan_ref
+    B, S, D, chunk = case
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, (B, S, D)), jnp.float32)
+    b = arr(B, S, D)
+    h1 = rglru_scan_chunked(a, b, chunk)
+    h2 = rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mlstm_chunked_matches_sequential():
+    """Chunkwise-parallel mLSTM == per-token scan (perf variant)."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.models import recurrent as rec
+    from repro.models.layers import init_tree
+    cfg = get_config("xlstm-125m", smoke=True)
+    p = init_tree(jax.random.PRNGKey(0), rec.mlstm_specs(cfg), jnp.float32)
+    # scale 1.5 puts |n.q| above the 1.0 clamp, exercising the normalizer
+    # (a w-vs-a mixup there is invisible at small scale — regression)
+    x = jnp.asarray(RNG.normal(0, 1.5, (2, 100, cfg.d_model)), jnp.float32)
+    y1, st1 = rec.apply_mlstm(cfg, p, x)
+    y2, st2 = rec.apply_mlstm_chunked(cfg, p, x, chunk=32)
+    np.testing.assert_allclose(np.asarray(st1["C"]), np.asarray(st2["C"]),
+                               atol=1e-5)
+    d = np.abs(np.asarray(y1) - np.asarray(y2))
+    assert d.mean() < 1e-5 and d.max() < 5e-3, (d.mean(), d.max())
+
+
+DECODE_CASES = [(2, 256, 8, 4, 64, 100, 0), (1, 300, 4, 2, 32, 299, 0),
+                (2, 512, 8, 8, 128, 400, 128), (1, 64, 4, 1, 64, 10, 0)]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES,
+                         ids=lambda c: "-".join(map(str, c)))
+def test_decode_attention_allclose(case):
+    """Ring-cache decode kernel == oracle across GQA/MQA/window configs."""
+    B, W, H, K, hd, pos, window = case
+    q = arr(B, 1, H, hd)
+    kc, vc = arr(B, W, K, hd), arr(B, W, K, hd)
+    sp = np.full(W, -10**9, np.int32)
+    sp[:min(pos + 1, W)] = np.arange(min(pos + 1, W))
+    sp = jnp.asarray(sp)
+    o = ops.decode_attention(q, kc, vc, sp, pos, window=window)
+    r = ref.decode_attention_ref(q, kc, vc, sp, pos, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attention_matches_model_decode():
+    """Kernel agrees with attention.decode_self_attention's softmax path
+    (same ring semantics) on a ring-wrapped cache."""
+    from repro.models import attention as attn
+    B, W, H, K, hd = 2, 32, 4, 2, 16
+    q = arr(B, 1, H, hd)
+    kc, vc = arr(B, W, K, hd), arr(B, W, K, hd)
+    pos = 40                                    # wrapped: slots hold 9..40
+    sp = np.asarray([(pos - ((pos - w) % W)) for w in range(W)])
+    sp = jnp.asarray(np.where(sp >= 0, sp, -10**9), jnp.int32)
+    o = ops.decode_attention(q, kc, vc, sp, pos)
+    r = ref.decode_attention_ref(q, kc, vc, sp, pos)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=3e-5)
