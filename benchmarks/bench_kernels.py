@@ -1,10 +1,16 @@
 """Benchmark: Pallas kernels vs jnp oracles — correctness + CPU timing.
 
-Timing here is interpret-mode (CPU) so it measures the oracle-vs-wrapper
-overhead, not TPU speed; the TPU numbers come from the dry-run roofline.
+Timing here is CPU-only: the `ref` column times the jnp oracle and the
+`kernel` column times the public ops.* wrapper (interpret mode off-TPU, so
+it measures the wrapper+interpret overhead, not TPU speed; the TPU numbers
+come from the dry-run roofline).  The speedup column (ref/kernel) makes
+aggregation-path perf regressions visible; results also land in
+``benchmarks/BENCH_kernels.json``.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -12,6 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
 
 
 def _time(fn, *args, reps=3):
@@ -22,9 +30,22 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+def _report(csv_rows, json_rows, name, err, us_ref, us_kernel):
+    speedup = us_ref / us_kernel if us_kernel else float("nan")
+    print(f"      {name:32s} {err:9.2e} {us_ref:12.0f} {us_kernel:12.0f}"
+          f" {speedup:8.2f}x")
+    csv_rows.append(("kernels", name, us_ref,
+                     f"err={err:.2e};us_kernel={us_kernel:.0f};"
+                     f"speedup={speedup:.2f}"))
+    json_rows.append({"case": name, "max_err": err, "us_ref": us_ref,
+                      "us_kernel": us_kernel, "speedup": speedup})
+
+
 def run(csv_rows: list):
     rng = np.random.default_rng(0)
-    print("\n[kernels] case                          max|err|   us/call(ref)")
+    json_rows: list = []
+    print("\n[kernels] case                          max|err|   us/call(ref)"
+          "   us/call(krn)  speedup")
     # attention
     for (B, S, H, K, hd, w) in [(2, 256, 8, 4, 64, 0), (1, 512, 8, 8, 64, 128)]:
         q = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)), jnp.float32)
@@ -33,11 +54,14 @@ def run(csv_rows: list):
         o = ops.flash_attention(q, k, v, causal=True, window=w)
         r = ref.flash_attention_ref(q, k, v, causal=True, window=w)
         err = float(jnp.max(jnp.abs(o - r)))
-        us = _time(lambda *a: ref.flash_attention_ref(*a, causal=True,
-                                                      window=w), q, k, v)
-        name = f"attn B{B}S{S}H{H}K{K}hd{hd}w{w}"
-        print(f"      {name:32s} {err:9.2e} {us:12.0f}")
-        csv_rows.append(("kernels", name, us, f"err={err:.2e}"))
+        # jit both sides so ref-vs-kernel compares compiled functions,
+        # not eager dispatch vs jit.
+        us = _time(jax.jit(lambda *a: ref.flash_attention_ref(
+            *a, causal=True, window=w)), q, k, v)
+        us_k = _time(lambda *a: ops.flash_attention(*a, causal=True,
+                                                    window=w), q, k, v)
+        _report(csv_rows, json_rows, f"attn B{B}S{S}H{H}K{K}hd{hd}w{w}",
+                err, us, us_k)
     # rglru
     for (B, S, D) in [(2, 512, 256), (1, 2048, 128)]:
         a = jnp.asarray(rng.uniform(0.8, 0.999, (B, S, D)), jnp.float32)
@@ -45,18 +69,41 @@ def run(csv_rows: list):
         h = ops.rglru_scan(a, b)
         r = ref.rglru_scan_ref(a, b)
         err = float(jnp.max(jnp.abs(h - r)))
-        us = _time(ref.rglru_scan_ref, a, b)
-        name = f"rglru B{B}S{S}D{D}"
-        print(f"      {name:32s} {err:9.2e} {us:12.0f}")
-        csv_rows.append(("kernels", name, us, f"err={err:.2e}"))
-    # aggregate
+        us = _time(jax.jit(ref.rglru_scan_ref), a, b)
+        us_k = _time(ops.rglru_scan, a, b)
+        _report(csv_rows, json_rows, f"rglru B{B}S{S}D{D}", err, us, us_k)
+    # aggregate: reduce-only, fused cloud (eq. 10), fused edge (eq. 6)
     for (N, F) in [(32, 65536), (512, 4096)]:
         x = jnp.asarray(rng.normal(0, 1, (N, F)), jnp.float32)
         w = jnp.asarray(rng.uniform(1, 10, N), jnp.float32)
         o = ops.hier_aggregate(x, w)
         r = ref.hier_aggregate_ref(x, w)
         err = float(jnp.max(jnp.abs(o - r)))
-        us = _time(ref.hier_aggregate_ref, x, w)
-        name = f"agg N{N}F{F}"
-        print(f"      {name:32s} {err:9.2e} {us:12.0f}")
-        csv_rows.append(("kernels", name, us, f"err={err:.2e}"))
+        us = _time(jax.jit(ref.hier_aggregate_ref), x, w)
+        us_k = _time(ops.hier_aggregate, x, w)
+        _report(csv_rows, json_rows, f"agg N{N}F{F}", err, us, us_k)
+
+        o = ops.hier_cloud_aggregate(x, w)
+        r = ref.hier_bcast_aggregate_ref(x, w)
+        err = float(jnp.max(jnp.abs(o - r)))
+        us = _time(jax.jit(ref.hier_bcast_aggregate_ref), x, w)
+        us_k = _time(ops.hier_cloud_aggregate, x, w)
+        _report(csv_rows, json_rows, f"agg-cloud N{N}F{F}", err, us, us_k)
+    for (N, F, M) in [(32, 65536, 4), (512, 4096, 16)]:
+        x = jnp.asarray(rng.normal(0, 1, (N, F)), jnp.float32)
+        w = jnp.asarray(rng.uniform(1, 10, N), jnp.float32)
+        g = jnp.asarray(rng.integers(0, M, N), jnp.int32)
+        seg = lambda xx, ww, gg: ops.hier_segment_aggregate(
+            xx, ww, gg, num_groups=M)
+        seg_ref = lambda xx, ww, gg: ref.hier_segment_aggregate_ref(
+            xx, ww, gg, M)
+        o = seg(x, w, g)
+        r = seg_ref(x, w, g)
+        err = float(jnp.max(jnp.abs(o - r)))
+        us = _time(jax.jit(seg_ref), x, w, g)
+        us_k = _time(seg, x, w, g)
+        _report(csv_rows, json_rows, f"agg-edge N{N}F{F}M{M}", err, us, us_k)
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(json_rows, f, indent=2)
+    print(f"      wrote {len(json_rows)} cases to {JSON_PATH}")

@@ -1,18 +1,25 @@
 """Three-layer hierarchical FL runtime (Alg. 1).
 
-* ``aggregate`` — weighted model averaging, eqs. (6)/(10).
+* ``aggregate`` — weighted model averaging, eqs. (6)/(10), over pytrees or
+  the flat ``(N, F_total)`` buffer (one fused dispatch per event).
+* ``flatten``   — flat-buffer packing of stacked pytrees (the hot-path
+  layout; cached treedef/offsets/dtypes).
 * ``clients``   — local solvers: full-batch GD (paper) and DANE [22].
 * ``sim``       — simulation backend: vmap over stacked UE replicas with a
-  simulated wall clock driven by the delay model (Figs. 4/6).
+  simulated wall clock driven by the delay model (Figs. 4/6); carries the
+  flat buffer through the b-iteration edge loop.
 * ``spmd``      — SPMD backend: shard_map over an ('edge','ue') mesh with
-  grouped psum every ``a`` steps and global psum every ``a*b`` (the TPU
-  adaptation — edge = pod, cloud = cross-pod DCN).
+  one flat grouped psum every ``a`` steps and a global one every ``a*b``
+  (the TPU adaptation — edge = pod, cloud = cross-pod DCN).
 """
-from repro.fl.aggregate import weighted_average, stacked_weighted_average
+from repro.fl.aggregate import (flat_cloud_aggregate, flat_edge_aggregate,
+                                stacked_weighted_average, weighted_average)
+from repro.fl.flatten import FlatLayout
 from repro.fl.sim import HFLSimulator, SimResult
 from repro.fl.spmd import hfl_spmd_round, make_hfl_cloud_round
 
 __all__ = [
     "weighted_average", "stacked_weighted_average",
+    "flat_cloud_aggregate", "flat_edge_aggregate", "FlatLayout",
     "HFLSimulator", "SimResult", "hfl_spmd_round", "make_hfl_cloud_round",
 ]

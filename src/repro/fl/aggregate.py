@@ -1,19 +1,48 @@
 """Weighted model aggregation — eqs. (6) and (10).
 
-Two layouts:
+Three layouts:
 
-* list-of-pytrees (simulation backend bookkeeping);
-* STACKED pytrees whose leaves carry a leading UE axis (the vmap layout) —
-  the hot path; ``stacked_weighted_average`` optionally dispatches to the
-  Pallas ``hier_aggregate`` kernel.
+* list-of-pytrees (simulation backend bookkeeping): ``weighted_average``;
+* STACKED pytrees whose leaves carry a leading UE axis (the vmap layout):
+  ``stacked_weighted_average``;
+* the FLAT buffer (``repro.fl.flatten``): ``flat_edge_aggregate`` /
+  ``flat_cloud_aggregate`` — the hot path.
+
+Flat-buffer layout: the whole stacked model is one contiguous
+``(N, F_total)`` fp32 buffer (leaf order = treedef order, each leaf
+flattened row-major into its column slice).  Each aggregation event is
+then ONE operation over the buffer instead of one per pytree leaf:
+
+* edge (eq. 6)  — per-edge weighted segment mean, scattered back to the
+  members' rows;
+* cloud (eq. 10) — global weighted mean, broadcast back to every row.
+
+Kernel dispatch rules: on TPU both events lower to a single fused Pallas
+kernel (``repro.kernels.ops.hier_segment_aggregate`` /
+``hier_cloud_aggregate``); elsewhere a pure-jnp segment_sum/tensordot path
+is used (running the Pallas kernels in interpret mode off-TPU would be
+strictly slower).  ``use_kernel=None`` (the default) applies this backend
+auto-selection; pass True/False to force a path (tests do).
+
+``stacked_weighted_average`` keeps the pytree API for callers outside the
+hot loop: it ravels through the flat buffer, aggregates once, and
+unravels back to the original dtypes/shapes.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+from repro.fl.flatten import FlatLayout
+from repro.kernels.ops import hier_cloud_aggregate, hier_segment_aggregate
+
+
+def _select_kernel(use_kernel: Optional[bool]) -> bool:
+    if use_kernel is None:
+        return jax.default_backend() == "tpu"
+    return bool(use_kernel)
 
 
 def weighted_average(params_list: Sequence, weights: Sequence[float]):
@@ -29,42 +58,69 @@ def weighted_average(params_list: Sequence, weights: Sequence[float]):
     return jax.tree.map(avg, *params_list)
 
 
+# ---------------------------------------------------------------------------
+# Flat-buffer aggregation — the hot path (one dispatch per event).
+# ---------------------------------------------------------------------------
+
+
+def flat_cloud_aggregate(buf, weights, *, use_kernel: Optional[bool] = None):
+    """Cloud aggregation (eq. 10) over the flat buffer.
+
+    buf: (N, F_total) float, weights: (N,) -> (N, F_total) fp32 with every
+    row holding the global weighted mean.
+    """
+    weights = jnp.asarray(weights, jnp.float32)
+    if _select_kernel(use_kernel):
+        return hier_cloud_aggregate(buf, weights)
+    mean = jnp.tensordot(weights, buf.astype(jnp.float32),
+                         axes=1) / jnp.sum(weights)
+    return jnp.broadcast_to(mean[None], buf.shape).astype(jnp.float32)
+
+
+def flat_edge_aggregate(buf, weights, group_ids, num_groups: int, *,
+                        use_kernel: Optional[bool] = None):
+    """Edge aggregation (eq. 6) over the flat buffer.
+
+    buf: (N, F_total) float, weights: (N,), group_ids: (N,) ints ->
+    (N, F_total) fp32 with row n holding the weighted mean of n's edge.
+    """
+    weights = jnp.asarray(weights, jnp.float32)
+    group_ids = jnp.asarray(group_ids, jnp.int32)
+    ng = int(num_groups)
+    if _select_kernel(use_kernel):
+        return hier_segment_aggregate(buf, weights, group_ids,
+                                      num_groups=ng)
+    bf = buf.astype(jnp.float32)
+    acc = jax.ops.segment_sum(weights[:, None] * bf, group_ids,
+                              num_segments=ng)
+    gw = jax.ops.segment_sum(weights, group_ids, num_segments=ng)
+    mean = acc / jnp.maximum(gw, 1e-12)[:, None]
+    return mean[group_ids]
+
+
+# ---------------------------------------------------------------------------
+# Stacked-pytree API (ravels through the flat buffer).
+# ---------------------------------------------------------------------------
+
+
 def stacked_weighted_average(stacked, weights, *, group_ids=None,
                              num_groups: Optional[int] = None,
-                             use_kernel: bool = False):
+                             use_kernel: Optional[bool] = None):
     """Weighted mean over the leading UE axis of every leaf.
 
     group_ids=None      -> cloud aggregation (eq. 10): one global mean,
                            broadcast back to every UE slot.
     group_ids=(N,) ints -> edge aggregation (eq. 6): segment mean per edge,
                            broadcast back to that edge's members.
+
+    Internally packs the pytree into the flat ``(N, F_total)`` buffer so
+    the whole event is one dispatch, then restores leaf dtypes/shapes.
     """
-    weights = jnp.asarray(weights, jnp.float32)
+    layout = FlatLayout.of(stacked)
+    buf = layout.ravel(stacked)
     if group_ids is None:
-        wsum = jnp.sum(weights)
-
-        def cloud(leaf):
-            if use_kernel:
-                from repro.kernels.ops import hier_aggregate
-                mean = hier_aggregate(leaf, weights)
-            else:
-                lf = leaf.astype(jnp.float32)
-                mean = jnp.tensordot(weights, lf, axes=1) / wsum
-            return jnp.broadcast_to(mean[None], leaf.shape).astype(leaf.dtype)
-
-        return jax.tree.map(cloud, stacked)
-
-    group_ids = jnp.asarray(group_ids, jnp.int32)
-    ng = int(num_groups)
-    gw = jax.ops.segment_sum(weights, group_ids, num_segments=ng)
-
-    def edge(leaf):
-        lf = leaf.astype(jnp.float32)
-        flat = lf.reshape(lf.shape[0], -1)
-        acc = jax.ops.segment_sum(weights[:, None] * flat, group_ids,
-                                  num_segments=ng)
-        mean = acc / jnp.maximum(gw, 1e-12)[:, None]
-        out = mean[group_ids].reshape(lf.shape)
-        return out.astype(leaf.dtype)
-
-    return jax.tree.map(edge, stacked)
+        out = flat_cloud_aggregate(buf, weights, use_kernel=use_kernel)
+    else:
+        out = flat_edge_aggregate(buf, weights, group_ids,
+                                  int(num_groups), use_kernel=use_kernel)
+    return layout.unravel(out)

@@ -1,0 +1,105 @@
+"""Flat-buffer packing of stacked pytrees — the aggregation hot-path layout.
+
+Every aggregation event in Alg. 1 (edge eq. 6, cloud eq. 10) is a weighted
+mean over the leading UE axis of EVERY leaf.  Doing that leaf-by-leaf costs
+one XLA dispatch per leaf per event; packing the stacked pytree into one
+contiguous ``(N, F_total)`` fp32 buffer turns each event into a single
+fused kernel call over the whole model (the layout Liu et al. 2019 and
+Lin et al. 2023 use to scale their hierarchical-FL evaluations).
+
+``FlatLayout`` caches everything needed to round-trip:
+
+* ``treedef``  — the pytree structure;
+* ``shapes``   — per-leaf trailing shapes (without the leading N);
+* ``dtypes``   — per-leaf dtypes, restored on unravel;
+* ``offsets``  — per-leaf start column in the flat feature axis.
+
+``ravel``/``unravel`` are pure jnp reshapes + concat/slice, so under jit
+they fuse to (nearly) free layout ops; the simulation backend keeps its
+state as the flat buffer and unravels only at train/eval boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_LAYOUT_CACHE: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    treedef: Any
+    shapes: Tuple[tuple, ...]      # trailing (per-UE) shape of each leaf
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]         # prod(shape) per leaf
+    offsets: Tuple[int, ...]       # start column of each leaf
+    total: int                     # F_total
+
+    # -- construction ---------------------------------------------------
+
+    @classmethod
+    def of(cls, stacked) -> "FlatLayout":
+        """Layout of a STACKED pytree (every leaf ``(N, *shape)``)."""
+        leaves, treedef = jax.tree.flatten(stacked)
+        shapes = tuple(tuple(l.shape[1:]) for l in leaves)
+        dtypes = tuple(l.dtype for l in leaves)
+        return cls._build(treedef, shapes, dtypes)
+
+    @classmethod
+    def of_single(cls, params) -> "FlatLayout":
+        """Layout of an UNSTACKED pytree (one model, no UE axis)."""
+        leaves, treedef = jax.tree.flatten(params)
+        shapes = tuple(tuple(l.shape) for l in leaves)
+        dtypes = tuple(l.dtype for l in leaves)
+        return cls._build(treedef, shapes, dtypes)
+
+    @classmethod
+    def _build(cls, treedef, shapes, dtypes) -> "FlatLayout":
+        key = (treedef, shapes, dtypes)
+        hit = _LAYOUT_CACHE.get(key)
+        if hit is not None:
+            return hit
+        sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+        offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+        layout = cls(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                     sizes=sizes, offsets=offsets, total=int(sum(sizes)))
+        _LAYOUT_CACHE[key] = layout
+        return layout
+
+    # -- stacked round-trip ---------------------------------------------
+
+    def ravel(self, stacked):
+        """Pack a stacked pytree into one ``(N, F_total)`` fp32 buffer."""
+        leaves = self.treedef.flatten_up_to(stacked)
+        n = leaves[0].shape[0]
+        cols = [l.reshape(n, -1).astype(jnp.float32) for l in leaves]
+        return jnp.concatenate(cols, axis=1)
+
+    def unravel(self, buf):
+        """Inverse of ``ravel``: restore per-leaf shapes AND dtypes."""
+        n = buf.shape[0]
+        leaves = [
+            buf[:, o:o + s].reshape((n,) + shp).astype(dt)
+            for o, s, shp, dt in zip(self.offsets, self.sizes,
+                                     self.shapes, self.dtypes)
+        ]
+        return self.treedef.unflatten(leaves)
+
+    # -- single-model round-trip (eval / checkpoint boundaries) ---------
+
+    def ravel_single(self, params):
+        leaves = self.treedef.flatten_up_to(params)
+        return jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+    def unravel_single(self, vec):
+        leaves = [
+            vec[o:o + s].reshape(shp).astype(dt)
+            for o, s, shp, dt in zip(self.offsets, self.sizes,
+                                     self.shapes, self.dtypes)
+        ]
+        return self.treedef.unflatten(leaves)

@@ -10,6 +10,12 @@ so the reported time-to-accuracy curves (Figs. 4/6) reflect the wireless
 delay model, not CPU wall time.  Every UE's local data is resampled to a
 common per-UE size so the replicas stack (documented simplification —
 the true D_n still drives both the aggregation weights and the clock).
+
+Hot-loop layout: the UE replicas live in ONE flat (N, F_total) fp32
+buffer (``repro.fl.flatten``); the whole b-iteration edge loop carries
+the buffer (donated on accelerator backends) and every aggregation event
+is a single fused dispatch (``repro.fl.aggregate.flat_*``).  Pytrees are
+materialized only at train/eval/checkpoint boundaries.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ import numpy as np
 from repro.core import delay
 from repro.core.schedule import HFLSchedule
 from repro.fl import aggregate, clients
+from repro.fl.flatten import FlatLayout
 
 
 @dataclasses.dataclass
@@ -70,8 +77,12 @@ class HFLSimulator:
         }
         self.batches = stacked                       # leaves (N, k, ...)
 
-        self.params = jax.tree.map(
+        stacked_params = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), init_params)
+        # Hot-loop state is the flat (N, F_total) buffer; the pytree form
+        # is materialized only at eval/checkpoint boundaries.
+        self._layout = FlatLayout.of(stacked_params)
+        self._flat = self._layout.ravel(stacked_params)
         # Aggregation weights: the paper's D_n (eq. 6/10).
         if schedule.problem is not None:
             self.weights = jnp.asarray(schedule.problem.samples, jnp.float32)
@@ -82,6 +93,15 @@ class HFLSimulator:
 
     # ------------------------------------------------------------------
 
+    @property
+    def params(self):
+        """Stacked UE replicas, unravelled from the flat buffer."""
+        return self._layout.unravel(self._flat)
+
+    @params.setter
+    def params(self, stacked):
+        self._flat = self._layout.ravel(stacked)
+
     def _build_cloud_round(self):
         a, b = self.schedule.a, self.schedule.b
         M = self.schedule.num_edges
@@ -89,33 +109,40 @@ class HFLSimulator:
         weights, group_ids = self.weights, self.group_ids
         solver = self.solver
         dane_mu = self.dane_mu
+        layout = self._layout
 
         local_gd = clients.gd_local_steps(loss_fn, a, lr)
         local_dane = clients.dane_local_steps(loss_fn, a, lr, mu_prox=dane_mu)
 
-        @jax.jit
-        def cloud_round(params, batches):
-            def edge_round(_, p):
+        def cloud_round(flat, batches):
+            # The whole b-iteration edge loop carries the flat buffer;
+            # unravel/ravel around local training are jit-fused reshapes,
+            # and each aggregation event is a single dispatch.
+            def edge_round(_, buf):
+                p = layout.unravel(buf)
                 if solver == "dane":
                     g_bar = clients.global_gradient(loss_fn, p, batches, weights)
                     p = jax.vmap(lambda pp, bb: local_dane(pp, bb, g_bar))(
                         p, batches)
                 else:
                     p = jax.vmap(local_gd)(p, batches)
-                return aggregate.stacked_weighted_average(
-                    p, weights, group_ids=group_ids, num_groups=M)
+                return aggregate.flat_edge_aggregate(
+                    layout.ravel(p), weights, group_ids, M)
 
-            p = jax.lax.fori_loop(0, b, edge_round, params)
-            return aggregate.stacked_weighted_average(p, weights)
+            flat = jax.lax.fori_loop(0, b, edge_round, flat)
+            return aggregate.flat_cloud_aggregate(flat, weights)
 
-        return cloud_round
+        # Donate the flat buffer so the cloud round updates it in place
+        # (donation is a no-op warning on CPU, so only request it where
+        # the runtime honors it).
+        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        return jax.jit(cloud_round, donate_argnums=donate)
 
     def global_params(self):
         """The cloud model: weighted mean over UE replicas (eq. 10)."""
         w = self.weights / jnp.sum(self.weights)
-        return jax.tree.map(
-            lambda x: jnp.tensordot(w, x.astype(jnp.float32), axes=1),
-            self.params)
+        mean = jnp.tensordot(w, self._flat, axes=1)      # (F_total,)
+        return self._layout.unravel_single(mean)
 
     # ------------------------------------------------------------------
 
@@ -128,7 +155,7 @@ class HFLSimulator:
         clock = 0.0
         test_batch = jax.tree.map(jnp.asarray, test_batch)
         for r in range(rounds):
-            self.params = self._cloud_round(self.params, self.batches)
+            self._flat = self._cloud_round(self._flat, self.batches)
             clock += t_round
             if (r + 1) % eval_every == 0 or r == rounds - 1:
                 gp = self.global_params()

@@ -18,11 +18,19 @@ import functools
 from typing import Callable
 
 import jax
+import jax.flatten_util
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.fl import clients
+
+# jax.shard_map / jax.lax.pvary only exist on newer JAX; fall back to the
+# experimental home (0.4.x) where psum results need no re-marking.
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+_pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
 
 
 def stack_for_mesh(params, num_edges: int, ues_per_edge: int):
@@ -53,10 +61,15 @@ def make_hfl_cloud_round(loss_fn: Callable, mesh, *, a: int, b: int,
         w = w[0]
 
         def wavg(q, axis):
-            num = jax.tree.map(
-                lambda x: jax.lax.psum(w * x.astype(jnp.float32), axis), q)
+            # Single flat collective per aggregation event: ravel the
+            # pytree into one contiguous vector so the psum is ONE
+            # all-reduce, not one per leaf (mirrors the flat-buffer
+            # aggregation of the simulation backend).
+            flat, unravel = jax.flatten_util.ravel_pytree(
+                jax.tree.map(lambda x: x.astype(jnp.float32), q))
+            num = jax.lax.psum(w * flat, axis)
             den = jax.lax.psum(w, axis)
-            return jax.tree.map(lambda x: (x / den).astype(jnp.float32), num)
+            return unravel(num / den)
 
         def edge_round(_, q):
             if solver == "dane":
@@ -66,16 +79,17 @@ def make_hfl_cloud_round(loss_fn: Callable, mesh, *, a: int, b: int,
             else:
                 q = local_gd(q, batch)
             q = wavg(q, "ue")                             # eq. (6)
-            # psum over 'ue' erases the 'ue' varying mark; restore it so the
-            # fori_loop carry keeps a stable type.
-            return jax.tree.map(lambda x: jax.lax.pvary(x, ("ue",)), q)
+            # On new JAX the psum over 'ue' erases the 'ue' varying mark;
+            # restore it so the fori_loop carry keeps a stable type
+            # (no-op on 0.4.x, which has no varying marks).
+            return jax.tree.map(lambda x: _pvary(x, ("ue",)), q)
 
         q = jax.lax.fori_loop(0, b, edge_round, p)
         q = wavg(q, ("edge", "ue"))                       # eq. (10)
         return jax.tree.map(lambda x: x[None], q)
 
     spec_ue = P(("edge", "ue"))
-    fn = jax.shard_map(
+    fn = _shard_map(
         shard_fn, mesh=mesh,
         in_specs=(spec_ue, spec_ue, spec_ue),
         out_specs=spec_ue)

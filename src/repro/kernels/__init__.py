@@ -4,6 +4,9 @@
 * ``decode_attention`` — one-token GQA attention over the ring KV cache.
 * ``rglru_scan``       — RG-LRU linear recurrence, sequence-blocked.
 * ``hier_aggregate``   — weighted FedAvg reduction over stacked clients.
+* ``hier_segment_aggregate`` / ``hier_cloud_aggregate`` — fused edge/cloud
+  aggregation over the flat (N, F_total) buffer: segment/global weighted
+  mean + broadcast-back in ONE pallas_call per aggregation event.
 
 Each has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
 public wrappers (interpret=True off-TPU).

@@ -1,16 +1,29 @@
-"""Hierarchical weighted aggregation Pallas TPU kernel (eqs. 6/10).
+"""Hierarchical weighted aggregation Pallas TPU kernels (eqs. 6/10).
 
-The FedAvg hot-spot of the simulation backend: a size-weighted mean over
-the leading client axis of a stacked parameter leaf,
+The FedAvg hot-spot of the simulation backend, in three flavours over the
+flat ``(N, F)`` client-stacked buffer (see ``repro.fl.flatten``):
 
-    out[f] = sum_n w[n] * x[n, f] / sum_n w[n].
+* ``hier_aggregate_2d``          — global weighted mean, reduce-only:
+  ``out[f] = sum_n w[n] x[n,f] / sum_n w[n]``  (eq. 10, returns ``(F,)``).
+* ``hier_bcast_aggregate_2d``    — the same cloud mean FUSED with the
+  broadcast-back ``out[n] = mean`` (returns ``(N, F)``), so one kernel
+  call replaces the reduce + broadcast pair in the hot loop.
+* ``hier_segment_aggregate_2d``  — edge aggregation (eq. 6): per-edge
+  weighted segment mean fused with the scatter-back
+  ``out[n] = mean[group_ids[n]]`` (returns ``(N, F)``).
 
-TPU adaptation: a pure reduction — one pass over HBM, VPU-only.  The grid
-tiles the flattened feature axis in lane-aligned blocks; each instance
-loads the full (N, blk_f) client slab into VMEM (N = clients per edge,
-O(10-100), so the slab is small) and reduces it with a weighted sum.  The
-1/sum(w) scale folds into the same pass.  Client-blocking (grid axis for
-N with scratch accumulation) kicks in above MAX_N_UNBLOCKED clients.
+TPU adaptation: the grid tiles the flattened feature axis in lane-aligned
+blocks; each instance loads the full (N, blk_f) client slab into VMEM
+(N = clients per edge, O(10-100), so the slab is small).  The segment
+kernel receives the group membership as a dense one-hot ``(M, N)`` matrix
+so both the per-edge reduction (``onehot_w @ x`` on the MXU) and the
+broadcast-back (``onehot^T @ mean``) are matmuls — no gather/scatter on
+TPU.  The per-group weight normaliser is precomputed by the wrapper and
+folded into the same pass, with an ``(M, blk_f)`` VMEM accumulator
+carrying partial segment sums when client-blocking (N > MAX_N_UNBLOCKED)
+kicks in: the grid grows a two-step phase axis — phase 0 accumulates
+segment sums over client blocks, phase 1 scatters the means back — so one
+aggregation event stays ONE pallas_call at every size.
 """
 from __future__ import annotations
 
@@ -87,3 +100,134 @@ def hier_aggregate_2d(x, w, *, blk_f: int = 512, blk_n: int = 256,
         interpret=interpret,
     )(x, w)
     return out / wsum
+
+
+# ---------------------------------------------------------------------------
+# Fused broadcast-back variants: one pallas_call per aggregation EVENT.
+# ---------------------------------------------------------------------------
+
+
+def _bcast_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (N, blk_f)
+    w = w_ref[...].astype(jnp.float32)          # (N,)
+    mean = (w[:, None] * x).sum(0) / w.sum()
+    o_ref[...] = jnp.broadcast_to(mean[None], o_ref.shape)
+
+
+def hier_bcast_aggregate_2d(x, w, *, blk_f: int = 512,
+                            interpret: bool = False):
+    """Cloud aggregation (eq. 10) fused with broadcast-back.
+
+    x: (N, F), w: (N,) -> (N, F) fp32 where out[n] = weighted mean row.
+    Large N falls through to the segment kernel with a single group.
+    """
+    N, F = x.shape
+    if N > MAX_N_UNBLOCKED:
+        onehot = jnp.ones((1, N), jnp.float32)
+        gw = jnp.sum(w.astype(jnp.float32))[None]
+        return hier_segment_aggregate_2d(x, w, onehot, gw, blk_f=blk_f,
+                                         interpret=interpret)
+    blk_f = min(blk_f, F)
+    n_f = pl.cdiv(F, blk_f)
+    return pl.pallas_call(
+        _bcast_kernel,
+        grid=(n_f,),
+        in_specs=[
+            pl.BlockSpec((N, blk_f), lambda fi: (0, fi)),
+            pl.BlockSpec((N,), lambda fi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((N, blk_f), lambda fi: (0, fi)),
+        out_shape=jax.ShapeDtypeStruct((N, F), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def _seg_kernel(x_ref, w_ref, oh_ref, gw_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (N, blk_f)
+    w = w_ref[...].astype(jnp.float32)          # (N,)
+    oh = oh_ref[...]                            # (M, N) one-hot membership
+    gw = gw_ref[...]                            # (M,) per-group weight sums
+    acc = jnp.dot(oh * w[None, :], x,
+                  preferred_element_type=jnp.float32)        # (M, blk_f)
+    mean = acc / jnp.maximum(gw, 1e-12)[:, None]
+    o_ref[...] = jnp.dot(oh.T, mean,
+                         preferred_element_type=jnp.float32)  # (N, blk_f)
+
+
+def _seg_kernel_blocked(x_ref, w_ref, oh_ref, gw_ref, o_ref, acc_ref):
+    ph = pl.program_id(1)                       # 0 = accumulate, 1 = scatter
+    ni = pl.program_id(2)
+
+    @pl.when((ph == 0) & (ni == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (blk_n, blk_f)
+    w = w_ref[...].astype(jnp.float32)          # (blk_n,) zero-padded
+    oh = oh_ref[...]                            # (M, blk_n)
+
+    @pl.when(ph == 0)
+    def _accumulate():
+        acc_ref[...] += jnp.dot(oh * w[None, :], x,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(ph == 1)
+    def _scatter():
+        gw = gw_ref[...]                        # (M,)
+        mean = acc_ref[...] / jnp.maximum(gw, 1e-12)[:, None]
+        o_ref[...] = jnp.dot(oh.T, mean,
+                             preferred_element_type=jnp.float32)
+
+
+def hier_segment_aggregate_2d(x, w, onehot, gw, *, blk_f: int = 512,
+                              blk_n: int = 256, interpret: bool = False):
+    """Edge aggregation (eq. 6) fused with scatter-back, one pallas_call.
+
+    x: (N, F), w: (N,), onehot: (M, N) fp32 group membership,
+    gw: (M,) per-group weight sums -> (N, F) fp32 with
+    out[n] = sum_{i in group(n)} w[i] x[i] / gw[group(n)].
+    """
+    N, F = x.shape
+    M = onehot.shape[0]
+    blk_f = min(blk_f, F)
+    n_f = pl.cdiv(F, blk_f)
+
+    if N <= MAX_N_UNBLOCKED:
+        return pl.pallas_call(
+            _seg_kernel,
+            grid=(n_f,),
+            in_specs=[
+                pl.BlockSpec((N, blk_f), lambda fi: (0, fi)),
+                pl.BlockSpec((N,), lambda fi: (0,)),
+                pl.BlockSpec((M, N), lambda fi: (0, 0)),
+                pl.BlockSpec((M,), lambda fi: (0,)),
+            ],
+            out_specs=pl.BlockSpec((N, blk_f), lambda fi: (0, fi)),
+            out_shape=jax.ShapeDtypeStruct((N, F), jnp.float32),
+            interpret=interpret,
+        )(x, w, onehot, gw)
+
+    blk_n = min(blk_n, N)
+    n_n = pl.cdiv(N, blk_n)
+    pad_n = n_n * blk_n - N
+    if pad_n:
+        # zero weights + zero one-hot columns: padded clients contribute
+        # nothing to any segment and their output rows are sliced off.
+        x = jnp.pad(x, ((0, pad_n), (0, 0)))
+        w = jnp.pad(w, (0, pad_n))
+        onehot = jnp.pad(onehot, ((0, 0), (0, pad_n)))
+    out = pl.pallas_call(
+        _seg_kernel_blocked,
+        grid=(n_f, 2, n_n),
+        in_specs=[
+            pl.BlockSpec((blk_n, blk_f), lambda fi, ph, ni: (ni, fi)),
+            pl.BlockSpec((blk_n,), lambda fi, ph, ni: (ni,)),
+            pl.BlockSpec((M, blk_n), lambda fi, ph, ni: (0, ni)),
+            pl.BlockSpec((M,), lambda fi, ph, ni: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk_n, blk_f), lambda fi, ph, ni: (ni, fi)),
+        out_shape=jax.ShapeDtypeStruct((N + pad_n, F), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((M, blk_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w, onehot, gw)
+    return out[:N]

@@ -92,6 +92,49 @@ def hier_aggregate(x, w, *, blk_f: int = 512):
     return out[:F].reshape(shape)
 
 
+@functools.partial(jax.jit, static_argnames=("blk_f",))
+def hier_cloud_aggregate(x, w, *, blk_f: int = 512):
+    """Cloud aggregation (eq. 10) fused with broadcast-back.
+
+    x: (N, ...) any float dtype, w: (N,) -> (N, ...) fp32 where every
+    client slot holds the global weighted mean.  One pallas_call.
+    """
+    N = x.shape[0]
+    shape = x.shape[1:]
+    x2 = x.reshape(N, -1)
+    F = x2.shape[1]
+    x2, _ = _pad_to(x2, 1, min(blk_f, max(F, 8)))
+    out = ha.hier_bcast_aggregate_2d(x2, w.astype(jnp.float32), blk_f=blk_f,
+                                     interpret=_interpret())
+    return out[:, :F].reshape((N,) + shape)
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "blk_f"))
+def hier_segment_aggregate(x, w, group_ids, *, num_groups: int,
+                           blk_f: int = 512):
+    """Edge aggregation (eq. 6) fused with scatter-back.
+
+    x: (N, ...) any float dtype, w: (N,), group_ids: (N,) ints in
+    [0, num_groups) -> (N, ...) fp32 with out[n] = weighted mean of n's
+    group.  Membership is lowered to a dense (M, N) one-hot so the kernel
+    does matmuls instead of gathers; one pallas_call per event.
+    """
+    N = x.shape[0]
+    shape = x.shape[1:]
+    w32 = w.astype(jnp.float32)
+    gid = group_ids.astype(jnp.int32)
+    onehot = (gid[None, :] ==
+              jnp.arange(num_groups, dtype=jnp.int32)[:, None]
+              ).astype(jnp.float32)                       # (M, N)
+    gw = onehot @ w32                                     # (M,)
+    x2 = x.reshape(N, -1)
+    F = x2.shape[1]
+    x2, _ = _pad_to(x2, 1, min(blk_f, max(F, 8)))
+    out = ha.hier_segment_aggregate_2d(x2, w32, onehot, gw, blk_f=blk_f,
+                                       interpret=_interpret())
+    return out[:, :F].reshape((N,) + shape)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "blk_w"))
 def decode_attention(q, k_cache, v_cache, slot_pos, pos, *, window: int = 0,
                      blk_w: int = 256):

@@ -53,6 +53,31 @@ def hier_aggregate_ref(x, w):
     return out.reshape(x.shape[1:])
 
 
+def hier_bcast_aggregate_ref(x, w):
+    """Cloud aggregation (eq. 10) with broadcast-back: (N, F) -> (N, F)."""
+    xf = x.reshape(x.shape[0], -1).astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    mean = (wf[:, None] * xf).sum(0) / wf.sum()
+    return jnp.broadcast_to(mean[None], xf.shape).reshape(x.shape)
+
+
+def hier_segment_aggregate_ref(x, w, group_ids, num_groups: int):
+    """Edge aggregation (eq. 6) with scatter-back, fp32.
+
+    x: (N, ...), w: (N,), group_ids: (N,) ints in [0, num_groups) ->
+    (N, ...) where out[n] is the weighted mean of n's group.  Zero-member
+    groups never appear in the output (no n maps to them).
+    """
+    xf = x.reshape(x.shape[0], -1).astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    gid = group_ids.astype(jnp.int32)
+    acc = jax.ops.segment_sum(wf[:, None] * xf, gid,
+                              num_segments=num_groups)
+    gw = jax.ops.segment_sum(wf, gid, num_segments=num_groups)
+    mean = acc / jnp.maximum(gw, 1e-12)[:, None]
+    return mean[gid].reshape(x.shape)
+
+
 def decode_attention_ref(q, k_cache, v_cache, slot_pos, pos, *,
                          window: int = 0):
     """One-token GQA attention over a ring KV cache.

@@ -6,3 +6,11 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Optional dev dependency: fall back to the deterministic shim in
+# tests/_shims so the suite collects without `hypothesis` installed
+# (see requirements-dev.txt for the real thing).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_shims"))

@@ -121,6 +121,83 @@ def test_hier_aggregate_matches_fl_aggregate():
                                atol=1e-5)
 
 
+# -- fused segment (edge, eq. 6) and broadcast (cloud, eq. 10) kernels ------
+
+SEG_CASES = [
+    # N, trailing shape, M  — ragged F (not lane/block aligned) throughout
+    (8, (100,), 3),
+    (33, (7, 13), 4),
+    (64, (1000,), 1),          # single edge
+    (600, (129,), 5),          # client-blocked path (N > MAX_N_UNBLOCKED)
+    (1030, (64,), 7),          # client-blocked + ragged N
+    (2, (1,), 2),              # singleton groups
+]
+
+
+@pytest.mark.parametrize("case", SEG_CASES,
+                         ids=lambda c: f"N{c[0]}-{'x'.join(map(str, c[1]))}-M{c[2]}")
+def test_hier_segment_aggregate_allclose(case):
+    N, shape, M = case
+    x = arr(N, *shape)
+    w = jnp.asarray(RNG.uniform(1, 10, N), jnp.float32)
+    g = jnp.asarray(RNG.integers(0, M, N), jnp.int32)
+    o = ops.hier_segment_aggregate(x, w, g, num_groups=M)
+    r = ref.hier_segment_aggregate_ref(x, w, g, M)
+    assert o.shape == x.shape and o.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=1e-5,
+                               atol=5e-5)
+
+
+def test_hier_segment_aggregate_bf16():
+    x = arr(16, 200).astype(jnp.bfloat16)
+    w = jnp.asarray(RNG.uniform(1, 10, 16), jnp.float32)
+    g = jnp.asarray(RNG.integers(0, 3, 16), jnp.int32)
+    o = ops.hier_segment_aggregate(x, w, g, num_groups=3)
+    r = ref.hier_segment_aggregate_ref(x, w, g, 3)
+    assert o.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r, np.float32),
+                               atol=2e-2)
+
+
+def test_hier_segment_aggregate_zero_member_edge():
+    """An edge with no members must not poison the output (no NaN/inf)."""
+    g = jnp.asarray([0, 0, 2, 2, 2, 0], jnp.int32)     # group 1 empty
+    x = arr(6, 37)
+    w = jnp.asarray(RNG.uniform(1, 10, 6), jnp.float32)
+    o = ops.hier_segment_aggregate(x, w, g, num_groups=3)
+    r = ref.hier_segment_aggregate_ref(x, w, g, 3)
+    assert bool(jnp.all(jnp.isfinite(o)))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=1e-5,
+                               atol=5e-5)
+
+
+@pytest.mark.parametrize("N", [5, 64, 600],
+                         ids=lambda n: f"N{n}")
+def test_hier_cloud_aggregate_broadcasts_mean(N):
+    x = arr(N, 333)
+    w = jnp.asarray(RNG.uniform(1, 10, N), jnp.float32)
+    o = ops.hier_cloud_aggregate(x, w)
+    r = ref.hier_bcast_aggregate_ref(x, w)
+    assert o.shape == x.shape
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=1e-5,
+                               atol=5e-5)
+    # every row is the same global mean
+    assert np.allclose(np.asarray(o), np.asarray(o)[0:1], atol=1e-6)
+
+
+def test_flat_aggregate_kernel_vs_jnp_paths():
+    """flat_edge/flat_cloud: forced-kernel and forced-jnp paths agree."""
+    from repro.fl.aggregate import flat_cloud_aggregate, flat_edge_aggregate
+    buf = arr(12, 257)
+    w = jnp.asarray(RNG.uniform(1, 5, 12), jnp.float32)
+    g = jnp.asarray(RNG.integers(0, 3, 12), jnp.int32)
+    for fn in (lambda uk: flat_cloud_aggregate(buf, w, use_kernel=uk),
+               lambda uk: flat_edge_aggregate(buf, w, g, 3, use_kernel=uk)):
+        np.testing.assert_allclose(np.asarray(fn(True)),
+                                   np.asarray(fn(False)),
+                                   rtol=1e-5, atol=1e-5)
+
+
 RGLRU_CHUNK_CASES = [(2, 64, 16, 16), (1, 300, 8, 64), (2, 1024, 4, 512),
                      (1, 100, 4, 256)]
 
