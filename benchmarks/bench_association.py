@@ -47,3 +47,21 @@ def run(csv_rows: list):
     print(f"      refined <= greedy in {wins_g}/{n}, <= random in {wins_r}/{n}")
     csv_rows.append(("fig5", "ranking", 0.0,
                      f"beats_greedy={wins_g}/{n};beats_random={wins_r}/{n}"))
+    # Incremental delta evaluation vs legacy full O(N*M) recompute per
+    # trial move: identical result (same search), timed head-to-head.
+    print("\n[refined] N      inc(ms)   full(ms)  speedup   |dlat|")
+    for n_ues in (100, 200, 400):
+        p = HFLProblem(num_edges=8, num_ues=n_ues, seed=0)
+        t0 = time.perf_counter()
+        A1 = assoc.refined(p, a=10)
+        t_inc = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        A0 = assoc.refined(p, a=10, incremental=False)
+        t_full = time.perf_counter() - t0
+        dlat = abs(delay.association_latency(p, A1, 10) -
+                   delay.association_latency(p, A0, 10))
+        print(f"      {n_ues:5d} {t_inc*1e3:9.1f} {t_full*1e3:9.1f} "
+              f"{t_full/t_inc:8.1f}x {dlat:9.2e}")
+        csv_rows.append(("refined-incremental", f"n={n_ues}", t_inc * 1e6,
+                         f"us_full={t_full*1e6:.0f};"
+                         f"speedup={t_full/t_inc:.1f};dlat={dlat:.2e}"))

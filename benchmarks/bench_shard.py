@@ -1,0 +1,117 @@
+"""Benchmark: mesh-sharded flat-buffer aggregation — scaling + parity cost.
+
+Spawns ONE subprocess with ``--xla_force_host_platform_device_count=8`` (the
+device count is locked at first jax init, so the parent process cannot force
+it) and sweeps ('data', 'model') mesh shapes over the same (N, F) aggregation
+event the kernels bench times.  Recorded per shape: the per-device slab bytes
+(the quantity that must shrink ~1/num_devices for billion-parameter models to
+fit) and us/aggregation-event for the edge (eq. 6, zero-collective) and cloud
+(eq. 10, one small psum) paths.  Results land in ``benchmarks/BENCH_shard.json``;
+the 1-device row is cross-checked against ``BENCH_kernels.json`` when present.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "BENCH_shard.json")
+KERNELS_JSON = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
+
+# Matches the kernels-bench aggregation case: agg-edge N512 F4096 M16.
+N, F, M = 512, 4096, 16
+SHAPES = [(1, 1), (1, 2), (1, 4), (1, 8), (2, 4), (8, 1)]
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import sys, json, time
+    sys.path.insert(0, sys.argv[1])
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from repro.fl import aggregate
+    from repro.fl.flatten import FlatLayout, ShardedFlatLayout
+    from repro.launch.mesh import make_agg_mesh
+
+    N, F, M = json.loads(sys.argv[2])
+    shapes = json.loads(sys.argv[3])
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (N, F)), jnp.float32)
+    w = jnp.asarray(rng.uniform(1, 10, N), jnp.float32)
+    gid = jnp.asarray(rng.integers(0, M, N), jnp.int32)
+    layout = FlatLayout.of({"x": x.reshape(N, F)})
+
+    def bench(fn, *args, reps=10):
+        jax.block_until_ready(fn(*args))     # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    rows = []
+    for (d, m) in shapes:
+        mesh = make_agg_mesh(m, d)
+        sl = ShardedFlatLayout.build(layout, mesh, num_rows=N,
+                                     group_ids=np.asarray(gid))
+        buf = jax.device_put(sl.pad(x), NamedSharding(mesh, sl.spec))
+        hw, hg = sl.pad_weights(w), sl.pad_rows(gid)
+        edge = jax.jit(lambda b: aggregate.flat_edge_aggregate(
+            b, hw, hg, M, mesh=mesh))
+        cloud = jax.jit(lambda b: aggregate.flat_cloud_aggregate(
+            b, hw, mesh=mesh))
+        # parity vs the single-device engine before timing
+        ref_e = aggregate.flat_edge_aggregate(x, w, gid, M)
+        ref_c = aggregate.flat_cloud_aggregate(x, w)
+        err = max(float(jnp.max(jnp.abs(sl.unpad(edge(buf)) - ref_e))),
+                  float(jnp.max(jnp.abs(sl.unpad(cloud(buf)) - ref_c))))
+        rows.append(dict(case=f"data{d}xmodel{m}", num_devices=d * m,
+                         data=d, model=m, n_padded=sl.n_padded,
+                         f_padded=sl.f_padded,
+                         per_device_bytes=sl.per_device_bytes(),
+                         us_edge=bench(edge, buf), us_cloud=bench(cloud, buf),
+                         max_err=err))
+    print("JSON:" + json.dumps(rows))
+""")
+
+
+def run(csv_rows: list):
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT, src, json.dumps([N, F, M]),
+         json.dumps(SHAPES)],
+        capture_output=True, text=True, timeout=900)
+    if r.returncode != 0:
+        print("      bench_shard subprocess failed:\n" + r.stderr[-2000:])
+        return
+    line = [l for l in r.stdout.splitlines() if l.startswith("JSON:")][-1]
+    rows = json.loads(line[len("JSON:"):])
+
+    print(f"\n[shard] N={N} F={F} M={M}  (8 forced host devices)")
+    print("      mesh           devs  bytes/dev   us/edge   us/cloud  max|err|")
+    base = next(x for x in rows if x["num_devices"] == 1)
+    for x in rows:
+        print(f"      {x['case']:14s} {x['num_devices']:4d} {x['per_device_bytes']:10d}"
+              f" {x['us_edge']:9.0f} {x['us_cloud']:10.0f} {x['max_err']:9.2e}")
+        csv_rows.append(("shard", x["case"], x["us_edge"],
+                         f"us_cloud={x['us_cloud']:.0f};"
+                         f"per_device_bytes={x['per_device_bytes']};"
+                         f"max_err={x['max_err']:.2e}"))
+        shrink = base["per_device_bytes"] / x["per_device_bytes"]
+        assert shrink > 0.75 * x["num_devices"], (
+            "per-device bytes must shrink ~1/num_devices", x)
+    with open(JSON_PATH, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"      wrote {len(rows)} cases to {JSON_PATH}")
+
+    if os.path.exists(KERNELS_JSON):
+        with open(KERNELS_JSON) as f:
+            kern = json.load(f)
+        k = next((x for x in kern
+                  if x["case"] == f"agg-edge N{N}F{F}M{M}"), None)
+        if k is not None:
+            print(f"      1-device edge event: {base['us_edge']:.0f}us vs "
+                  f"BENCH_kernels ref {k['us_ref']:.0f}us "
+                  f"(kernel-interpret {k['us_kernel']:.0f}us)")

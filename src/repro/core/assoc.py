@@ -175,8 +175,22 @@ def exhaustive(problem: HFLProblem, a: float = 1.0) -> np.ndarray:
     return best
 
 
+def _latency_terms(problem: HFLProblem, a: float):
+    """Split eq. (38)'s per-UE latency into fixed + per-count parts.
+
+    With equal bandwidth split, UE n on edge m hosting c UEs costs
+    ``t_fix[n] + c * t_unit[n, m]``: the upload time scales linearly in
+    the member count, which is what makes trial moves O(cap) to
+    re-evaluate instead of a full O(N*M) ``t_com`` recompute.
+    """
+    t_fix = np.asarray(a, float) * problem.t_cmp()              # (N,)
+    t_unit = problem.model_bits / (problem.bandwidth_total *
+                                   np.log2(1.0 + problem.snr()))  # (N, M)
+    return t_fix, t_unit
+
+
 def refined(problem: HFLProblem, a: float = 10.0,
-            max_moves: int = 500) -> np.ndarray:
+            max_moves: int = 500, incremental: bool = True) -> np.ndarray:
     """BEYOND-PAPER: Alg. 3 + bottleneck local search.
 
     Alg. 3 maximizes selected SNR, which is a proxy for the true objective
@@ -186,8 +200,124 @@ def refined(problem: HFLProblem, a: float = 10.0,
     included), until no move improves.  Each accepted move strictly lowers
     max-latency, so it terminates.  Reported separately in EXPERIMENTS.md
     §Perf (paper-faithful Alg. 3 is the baseline).
+
+    ``incremental=True`` (default) evaluates each trial move by DELTA: a
+    move only changes the two touched edges' latencies, so re-scoring is
+    O(members) + O(M) instead of the full O(N*M) ``association_latency``
+    recompute (the legacy path, kept for the bench comparison in
+    ``benchmarks/bench_association.py``).
     """
     cap = capacity_of(problem)
+    if not incremental:
+        return _refined_full_recompute(problem, a, max_moves, cap)
+    t_fix, t_unit = _latency_terms(problem, a)
+    N, M = problem.num_ues, problem.num_edges
+    edge_of = proposed(problem).argmax(1)                 # (N,)
+    members = [np.flatnonzero(edge_of == m).tolist() for m in range(M)]
+    counts = np.array([len(ms) for ms in members])
+
+    def edge_lat(mem, m, c):
+        # max latency of edge m hosting rows ``mem`` with count ``c``
+        if not mem:
+            return 0.0
+        mem = np.asarray(mem)
+        return float(np.max(t_fix[mem] + c * t_unit[mem, m]))
+
+    el = np.array([edge_lat(members[m], m, counts[m]) for m in range(M)])
+    cur = float(el.max())
+
+    def trial_max(changes: dict) -> float:
+        vals = el.copy()
+        for m, v in changes.items():
+            vals[m] = v
+        return float(vals.max())
+
+    for _ in range(max_moves):
+        per_ue = t_fix + counts[edge_of] * t_unit[np.arange(N), edge_of]
+        order = np.argsort(-per_ue)
+        # per-edge top-2 member latencies at current counts; invariant
+        # across the candidate bottleneck UEs below (state only changes
+        # when a move is accepted, which restarts the outer iteration)
+        top1 = np.zeros(M)
+        top1_idx = np.full(M, -1)
+        top2 = np.zeros(M)
+        for m in range(M):
+            ms = members[m]
+            if not ms:
+                continue
+            lats = per_ue[ms]
+            k = int(np.argmax(lats))
+            top1[m], top1_idx[m] = lats[k], ms[k]
+            if len(ms) > 1:
+                top2[m] = np.max(np.delete(lats, k))
+        improved = False
+        for n in order[:10]:                      # top-10 bottleneck UEs
+            m1 = int(edge_of[n])
+            best_val, best_apply = cur, None
+            mem1_wo = [i for i in members[m1] if i != n]
+            el1_move = edge_lat(mem1_wo, m1, counts[m1] - 1)
+            # single move to an edge with spare capacity
+            for m2 in range(M):
+                if m2 == m1 or counts[m2] >= cap:
+                    continue
+                el2 = edge_lat(members[m2] + [n], m2, counts[m2] + 1)
+                v = trial_max({m1: el1_move, m2: el2})
+                if v < best_val - 1e-12:
+                    best_val, best_apply = v, ("move", n, m2, el1_move, el2)
+            # swap with a UE on another edge (escapes capacity-tight minima)
+            # — fully vectorized over n2: a swap changes only edges m1/m2,
+            # and "edge max without n2" is a top-2 lookup, so every
+            # candidate is O(1) after this per-edge precompute.
+            base1 = edge_lat(mem1_wo, m1, counts[m1])
+            lat_on_m1 = t_fix + counts[m1] * t_unit[:, m1]      # n2 joins m1
+            add_n = t_fix[n] + counts * t_unit[n, :]            # n joins m2
+            # max of el over edges other than {m1, m2}, for every m2
+            el_ex1 = el.copy()
+            el_ex1[m1] = -np.inf
+            k = int(np.argmax(el_ex1))
+            second = np.max(np.delete(el_ex1, k)) if M > 1 else -np.inf
+            excl = np.where(np.arange(M) == k, second, el_ex1[k])
+            m2v = edge_of
+            rem_max = np.where(np.arange(N) == top1_idx[m2v],
+                               top2[m2v], top1[m2v])
+            el1v = np.maximum(base1, lat_on_m1)
+            el2v = np.maximum(rem_max, add_n[m2v])
+            vv = np.maximum(np.maximum(excl[m2v], el1v), el2v)
+            for n2 in np.flatnonzero(m2v != m1):
+                if vv[n2] < best_val - 1e-12:
+                    best_val = float(vv[n2])
+                    best_apply = ("swap", int(n2), int(m2v[n2]),
+                                  float(el1v[n2]), float(el2v[n2]))
+            if best_apply is not None:
+                kind, other, m2, new_el1, new_el2 = best_apply
+                if kind == "move":
+                    members[m1].remove(other)     # other == n
+                    members[m2].append(other)
+                    counts[m1] -= 1
+                    counts[m2] += 1
+                    edge_of[other] = m2
+                else:                             # swap n <-> other (n2)
+                    members[m1].remove(n)
+                    members[m2].remove(other)
+                    members[m1].append(other)
+                    members[m2].append(n)
+                    edge_of[n], edge_of[other] = m2, m1
+                el[m1], el[m2] = new_el1, new_el2
+                cur = best_val
+                improved = True
+                break
+        if not improved:
+            break
+    assoc = np.zeros((N, M), dtype=np.int64)
+    assoc[np.arange(N), edge_of] = 1
+    _assert_valid(problem, assoc, cap)
+    return assoc
+
+
+def _refined_full_recompute(problem: HFLProblem, a: float, max_moves: int,
+                            cap: int) -> np.ndarray:
+    """Legacy trial evaluation: full association_latency per candidate
+    move.  Same search; the bench times it against the incremental path."""
     assoc = proposed(problem)
     cur = delay.association_latency(problem, assoc, a)
     t_cmp = problem.t_cmp()

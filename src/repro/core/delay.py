@@ -50,16 +50,16 @@ def cloud_rounds(a, b, *, epsilon: float, zeta: float, gamma: float,
 def edge_round_time(problem: HFLProblem, assoc: np.ndarray, a) -> np.ndarray:
     """tau_m (eq. 33): per-edge time of one edge round, shape (M,).
 
-    Edges with no associated UEs contribute 0.
+    Edges with no associated UEs contribute 0.  Vectorized segment-max:
+    one ``np.maximum.at`` scatter over the member edges instead of a
+    Python loop over M.
     """
     t_cmp = problem.t_cmp()
     t_com = problem.t_com(assoc)
     per_ue = np.asarray(a, float) * t_cmp + t_com          # (N,)
     tau = np.zeros(problem.num_edges)
-    for m in range(problem.num_edges):
-        members = assoc[:, m] > 0
-        if members.any():
-            tau[m] = per_ue[members].max()
+    n_idx, m_idx = np.nonzero(assoc)
+    np.maximum.at(tau, m_idx, per_ue[n_idx])
     return tau
 
 

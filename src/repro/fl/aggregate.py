@@ -24,6 +24,22 @@ is used (running the Pallas kernels in interpret mode off-TPU would be
 strictly slower).  ``use_kernel=None`` (the default) applies this backend
 auto-selection; pass True/False to force a path (tests do).
 
+Mesh sharding (``mesh=``): pass a ('data', 'model') mesh and a buffer in
+the padded ``ShardedFlatLayout`` form (rows a multiple of the data axis,
+columns a multiple of the model axis) and both events run under
+``shard_map``, each device invoking the kernel/jnp body on ONLY its own
+``(N/num_data, F/num_model)`` slab with the feature block width sized to
+its slab (``repro.kernels.ops.pick_agg_blk_f``).  Collective pattern:
+
+* edge (eq. 6): ZERO cross-device traffic.  The layout's group-aligned
+  row permutation guarantees no edge straddles a data shard, so local
+  segment means ARE the global ones; the feature axis is embarrassingly
+  parallel to begin with.
+* cloud (eq. 10): exactly ONE small collective — a psum over 'data' of
+  the per-shard ``(F/num_model + 1,)`` partial weighted sums (numerator
+  concatenated with the weight denominator), then a local broadcast-back.
+  Devices in the same 'data' row never exchange feature columns.
+
 ``stacked_weighted_average`` keeps the pytree API for callers outside the
 hot loop: it ravels through the flat buffer, aggregates once, and
 unravels back to the original dtypes/shapes.
@@ -34,15 +50,48 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.fl.flatten import FlatLayout
-from repro.kernels.ops import hier_cloud_aggregate, hier_segment_aggregate
+from repro.kernels.ops import (hier_aggregate, hier_cloud_aggregate,
+                               hier_segment_aggregate, pick_agg_blk_f)
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS
+from repro.parallel.sharding import flat_buffer_spec
+
+# jax.shard_map only exists on newer JAX; fall back to the experimental
+# home (0.4.x).  repro.fl.spmd shares this resolved symbol.
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def _shard_map_norep(fn, mesh, in_specs, out_specs):
+    """shard_map without replication checking: pallas_call has no
+    replication rule on 0.4.x, and the aggregation bodies are checked by
+    parity tests instead."""
+    try:
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:                      # newer API dropped check_rep
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs)
 
 
 def _select_kernel(use_kernel: Optional[bool]) -> bool:
     if use_kernel is None:
         return jax.default_backend() == "tpu"
     return bool(use_kernel)
+
+
+def _axis_size(mesh, axis: str) -> int:
+    return int(dict(mesh.shape).get(axis, 1))
+
+
+def _trivial_mesh(mesh) -> bool:
+    """A 1-device mesh shards nothing; skip shard_map (pure overhead)."""
+    sizes = list(dict(mesh.shape).values())
+    return int(np.prod(sizes)) == 1 if sizes else True
 
 
 def weighted_average(params_list: Sequence, weights: Sequence[float]):
@@ -58,44 +107,122 @@ def weighted_average(params_list: Sequence, weights: Sequence[float]):
     return jax.tree.map(avg, *params_list)
 
 
+def psum_weighted_mean(num, den, axis):
+    """ONE-collective weighted mean inside shard_map/pmap.
+
+    ``num`` is the locally pre-weighted numerator vector, ``den`` the local
+    weight sum; they are concatenated so the cross-device reduction is a
+    SINGLE psum of ``len(num) + 1`` floats (the pattern both the sharded
+    cloud aggregate and the SPMD backend's per-event flat psum use).
+    """
+    v = jnp.concatenate([num, jnp.reshape(den, (1,)).astype(num.dtype)])
+    v = jax.lax.psum(v, axis)
+    return v[:-1] / v[-1]
+
+
 # ---------------------------------------------------------------------------
 # Flat-buffer aggregation — the hot path (one dispatch per event).
 # ---------------------------------------------------------------------------
 
 
-def flat_cloud_aggregate(buf, weights, *, use_kernel: Optional[bool] = None):
-    """Cloud aggregation (eq. 10) over the flat buffer.
-
-    buf: (N, F_total) float, weights: (N,) -> (N, F_total) fp32 with every
-    row holding the global weighted mean.
-    """
-    weights = jnp.asarray(weights, jnp.float32)
-    if _select_kernel(use_kernel):
-        return hier_cloud_aggregate(buf, weights)
+def _cloud_body(buf, weights, kernel: bool, blk_f: int):
+    """Single-slab cloud aggregation (eq. 10): mean + broadcast-back."""
+    if kernel:
+        return hier_cloud_aggregate(buf, weights, blk_f=blk_f)
     mean = jnp.tensordot(weights, buf.astype(jnp.float32),
                          axes=1) / jnp.sum(weights)
     return jnp.broadcast_to(mean[None], buf.shape).astype(jnp.float32)
 
 
-def flat_edge_aggregate(buf, weights, group_ids, num_groups: int, *,
-                        use_kernel: Optional[bool] = None):
-    """Edge aggregation (eq. 6) over the flat buffer.
-
-    buf: (N, F_total) float, weights: (N,), group_ids: (N,) ints ->
-    (N, F_total) fp32 with row n holding the weighted mean of n's edge.
-    """
-    weights = jnp.asarray(weights, jnp.float32)
-    group_ids = jnp.asarray(group_ids, jnp.int32)
-    ng = int(num_groups)
-    if _select_kernel(use_kernel):
+def _edge_body(buf, weights, group_ids, ng: int, kernel: bool, blk_f: int):
+    """Single-slab edge aggregation (eq. 6): segment mean + scatter-back."""
+    if kernel:
         return hier_segment_aggregate(buf, weights, group_ids,
-                                      num_groups=ng)
+                                      num_groups=ng, blk_f=blk_f)
     bf = buf.astype(jnp.float32)
     acc = jax.ops.segment_sum(weights[:, None] * bf, group_ids,
                               num_segments=ng)
     gw = jax.ops.segment_sum(weights, group_ids, num_segments=ng)
     mean = acc / jnp.maximum(gw, 1e-12)[:, None]
     return mean[group_ids]
+
+
+def flat_cloud_aggregate(buf, weights, *, use_kernel: Optional[bool] = None,
+                         mesh=None):
+    """Cloud aggregation (eq. 10) over the flat buffer.
+
+    buf: (N, F_total) float, weights: (N,) -> (N, F_total) fp32 with every
+    row holding the global weighted mean.
+
+    With ``mesh`` (a ('data', 'model') mesh; buf in the padded
+    ``ShardedFlatLayout`` form) the event runs under shard_map: each device
+    reduces its own slab, the per-shard partial sums meet in one small
+    psum over 'data', and the broadcast-back stays device-local.
+    """
+    weights = jnp.asarray(weights, jnp.float32)
+    kernel = _select_kernel(use_kernel)
+    if mesh is None or _trivial_mesh(mesh):
+        blk = pick_agg_blk_f(buf.shape[0], 1, buf.shape[1])
+        return _cloud_body(buf, weights, kernel, blk)
+
+    nd = _axis_size(mesh, DATA_AXIS)
+    nm = _axis_size(mesh, MODEL_AXIS)
+    spec = flat_buffer_spec(mesh)
+    row_spec = P(spec[0] if len(spec) else None)
+    blk = pick_agg_blk_f(buf.shape[0] // nd, 1, buf.shape[1] // nm)
+
+    if nd == 1:
+        def local_fn(b, w):
+            return _cloud_body(b, w, kernel, blk)
+    else:
+        def local_fn(b, w):
+            b32 = b.astype(jnp.float32)
+            den = jnp.sum(w)
+            if kernel:
+                # local weighted mean * local weight sum = local weighted
+                # sum; guard the all-padding shard (den == 0 -> mean NaN).
+                num = jnp.where(den > 0,
+                                hier_aggregate(b, w, blk_f=blk) * den, 0.0)
+            else:
+                num = jnp.tensordot(w, b32, axes=1)
+            mean = psum_weighted_mean(num, den, DATA_AXIS)
+            return jnp.broadcast_to(mean[None], b.shape).astype(jnp.float32)
+
+    fn = _shard_map_norep(local_fn, mesh, (spec, row_spec), spec)
+    return fn(buf, weights)
+
+
+def flat_edge_aggregate(buf, weights, group_ids, num_groups: int, *,
+                        use_kernel: Optional[bool] = None, mesh=None):
+    """Edge aggregation (eq. 6) over the flat buffer.
+
+    buf: (N, F_total) float, weights: (N,), group_ids: (N,) ints ->
+    (N, F_total) fp32 with row n holding the weighted mean of n's edge.
+
+    With ``mesh`` the event runs under shard_map with ZERO cross-device
+    traffic: rows must be group-aligned to the data shards (no edge
+    straddles a shard — ``ShardedFlatLayout`` guarantees this), so every
+    device's local segment means equal the global ones.
+    """
+    weights = jnp.asarray(weights, jnp.float32)
+    group_ids = jnp.asarray(group_ids, jnp.int32)
+    ng = int(num_groups)
+    kernel = _select_kernel(use_kernel)
+    if mesh is None or _trivial_mesh(mesh):
+        blk = pick_agg_blk_f(buf.shape[0], ng, buf.shape[1])
+        return _edge_body(buf, weights, group_ids, ng, kernel, blk)
+
+    nd = _axis_size(mesh, DATA_AXIS)
+    nm = _axis_size(mesh, MODEL_AXIS)
+    spec = flat_buffer_spec(mesh)
+    row_spec = P(spec[0] if len(spec) else None)
+    blk = pick_agg_blk_f(buf.shape[0] // nd, ng, buf.shape[1] // nm)
+
+    def local_fn(b, w, g):
+        return _edge_body(b, w, g, ng, kernel, blk)
+
+    fn = _shard_map_norep(local_fn, mesh, (spec, row_spec, row_spec), spec)
+    return fn(buf, weights, group_ids)
 
 
 # ---------------------------------------------------------------------------

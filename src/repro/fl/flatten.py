@@ -17,11 +17,28 @@ Lin et al. 2023 use to scale their hierarchical-FL evaluations).
 ``ravel``/``unravel`` are pure jnp reshapes + concat/slice, so under jit
 they fuse to (nearly) free layout ops; the simulation backend keeps its
 state as the flat buffer and unravels only at train/eval boundaries.
+
+Sharded layout (``ShardedFlatLayout``): on a ('data', 'model') mesh the
+buffer is distributed without replication —
+
+* the feature axis is zero-PADDED from ``F_total`` to ``f_padded``, a
+  multiple of the model-axis size, and sharded over 'model' (logical axis
+  'feat'), so each device owns one contiguous ``f_padded / num_model``
+  column slab;
+* the UE axis is sharded over 'data' (logical axis 'ue') after a GROUP-
+  ALIGNED row permutation: edges are bin-packed onto data shards (largest
+  group first) and every shard is padded with zero-weight rows to the
+  common ``rows_per_shard``, so no edge ever straddles a shard boundary.
+
+That alignment is what makes edge aggregation (eq. 6) embarrassingly
+parallel — every device segment-means only rows it owns, ZERO cross-device
+traffic — while the cloud mean (eq. 10) needs exactly one small
+``psum`` of per-shard partial sums over 'data' (see repro.fl.aggregate).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -103,3 +120,148 @@ class FlatLayout:
                                      self.shapes, self.dtypes)
         ]
         return self.treedef.unflatten(leaves)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded layout of the flat buffer.
+# ---------------------------------------------------------------------------
+
+
+def _pack_groups(group_ids: np.ndarray, num_shards: int):
+    """Bin-pack whole groups onto ``num_shards`` row shards (LPT greedy).
+
+    Returns (perm, n_padded): ``perm`` has length ``n_padded`` (a multiple
+    of num_shards); entry i is the original row index living at padded slot
+    i, or -1 for a zero-weight padding row.  Every group's rows land on
+    exactly one shard, so per-shard segment means equal global ones.
+    """
+    group_ids = np.asarray(group_ids)
+    groups = np.unique(group_ids)
+    rows = {g: np.flatnonzero(group_ids == g) for g in groups}
+    order = sorted(groups, key=lambda g: -len(rows[g]))   # largest first
+    bins: list = [[] for _ in range(num_shards)]
+    loads = np.zeros(num_shards, dtype=np.int64)
+    for g in order:
+        s = int(np.argmin(loads))
+        bins[s].extend(rows[g].tolist())
+        loads[s] += len(rows[g])
+    rows_per_shard = int(loads.max())
+    perm = []
+    for b in bins:
+        perm.extend(b)
+        perm.extend([-1] * (rows_per_shard - len(b)))
+    return np.asarray(perm, dtype=np.int64), num_shards * rows_per_shard
+
+
+@dataclasses.dataclass
+class ShardedFlatLayout:
+    """A ``FlatLayout`` distributed over a ('data', 'model') mesh.
+
+    External API works in the ORIGINAL row order and true ``F_total``;
+    internally the buffer is the padded ``(n_padded, f_padded)`` form whose
+    row/column shards divide the mesh axes evenly (see module docstring).
+    """
+    base: FlatLayout
+    mesh: Any
+    num_data: int
+    num_model: int
+    num_rows: int                   # original N
+    n_padded: int
+    f_padded: int
+    perm: np.ndarray                # (n_padded,) original index or -1
+    inv_perm: np.ndarray            # (num_rows,) padded slot of each row
+
+    @classmethod
+    def build(cls, base: FlatLayout, mesh, num_rows: int,
+              group_ids: Optional[np.ndarray] = None) -> "ShardedFlatLayout":
+        from repro.launch.mesh import DATA_AXIS, MODEL_AXIS
+        shape = dict(mesh.shape)
+        num_data = int(shape.get(DATA_AXIS, 1))
+        num_model = int(shape.get(MODEL_AXIS, 1))
+        f_padded = -(-base.total // num_model) * num_model
+        if num_data > 1:
+            if group_ids is None:
+                raise ValueError("data-axis sharding needs group_ids to "
+                                 "keep edges whole per shard")
+            assert len(group_ids) == num_rows
+            perm, n_padded = _pack_groups(np.asarray(group_ids), num_data)
+        else:
+            perm = np.arange(num_rows, dtype=np.int64)
+            n_padded = num_rows
+        inv_perm = np.empty(num_rows, dtype=np.int64)
+        inv_perm[perm[perm >= 0]] = np.flatnonzero(perm >= 0)
+        return cls(base=base, mesh=mesh, num_data=num_data,
+                   num_model=num_model, num_rows=num_rows,
+                   n_padded=n_padded, f_padded=f_padded,
+                   perm=perm, inv_perm=inv_perm)
+
+    # -- padded-form helpers (permuted rows, padded columns) ------------
+
+    @property
+    def spec(self):
+        """PartitionSpec of the padded buffer on ``self.mesh``."""
+        from repro.parallel.sharding import flat_buffer_spec
+        return flat_buffer_spec(self.mesh)
+
+    @property
+    def row_spec(self):
+        """PartitionSpec of per-row vectors (weights, group ids)."""
+        from jax.sharding import PartitionSpec as P
+        entries = tuple(self.spec)
+        return P(entries[0] if entries else None)
+
+    def per_device_bytes(self) -> int:
+        """fp32 bytes of one device's (rows, cols) slab."""
+        return (self.n_padded // self.num_data) * \
+               (self.f_padded // self.num_model) * 4
+
+    def pad(self, buf):
+        """(N, F_total) -> padded (n_padded, f_padded); pad rows are row-0
+        copies (their weight is zero wherever it matters)."""
+        if self.f_padded > self.base.total:
+            buf = jnp.pad(buf, ((0, 0), (0, self.f_padded - self.base.total)))
+        if self.n_padded != self.num_rows or np.any(self.perm !=
+                                                    np.arange(self.num_rows)):
+            buf = buf[jnp.asarray(np.maximum(self.perm, 0))]
+        return buf
+
+    def unpad(self, buf):
+        """Inverse of ``pad``: original row order, true F_total columns."""
+        out = buf[:, :self.base.total]
+        if self.n_padded != self.num_rows or np.any(self.perm !=
+                                                    np.arange(self.num_rows)):
+            out = out[jnp.asarray(self.inv_perm)]
+        return out
+
+    def pad_rows(self, x):
+        """Permute+pad any per-row array/pytree (leading axis num_rows)."""
+        idx = jnp.asarray(np.maximum(self.perm, 0))
+        return jax.tree.map(lambda l: l[idx], x)
+
+    def pad_weights(self, w):
+        """Permute+pad aggregation weights; padding rows get weight 0."""
+        w = jnp.asarray(w, jnp.float32)
+        mask = jnp.asarray(self.perm >= 0, jnp.float32)
+        return w[jnp.asarray(np.maximum(self.perm, 0))] * mask
+
+    # -- original-order round-trip --------------------------------------
+
+    def ravel(self, stacked):
+        """Stacked pytree -> padded sharded-ready buffer."""
+        return self.pad(self.base.ravel(stacked))
+
+    def unravel(self, buf):
+        """Padded buffer -> stacked pytree in original row order."""
+        return self.base.unravel(self.unpad(buf))
+
+    def ravel_padded(self, stacked):
+        """Stacked pytree ALREADY in padded row order -> padded buffer
+        (the hot-loop round-trip: no permutation, just the column pad)."""
+        buf = self.base.ravel(stacked)
+        if self.f_padded > self.base.total:
+            buf = jnp.pad(buf, ((0, 0), (0, self.f_padded - self.base.total)))
+        return buf
+
+    def unravel_padded(self, buf):
+        """Padded buffer -> stacked pytree keeping the padded row order."""
+        return self.base.unravel(buf[:, :self.base.total])

@@ -16,21 +16,29 @@ buffer (``repro.fl.flatten``); the whole b-iteration edge loop carries
 the buffer (donated on accelerator backends) and every aggregation event
 is a single fused dispatch (``repro.fl.aggregate.flat_*``).  Pytrees are
 materialized only at train/eval/checkpoint boundaries.
+
+Pass ``mesh=`` (a ('data', 'model') mesh) and the hot loop goes
+mesh-parallel end-to-end: the buffer is carried in the padded
+``ShardedFlatLayout`` form (UE rows group-aligned over 'data', feature
+columns over 'model' — no replication), local training vmaps over each
+shard's rows, edge aggregation runs collective-free under shard_map and
+the cloud mean costs one small psum (see repro.fl.aggregate).  Batches,
+weights and group ids are permuted/padded once at construction.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.core import delay
 from repro.core.schedule import HFLSchedule
 from repro.fl import aggregate, clients
-from repro.fl.flatten import FlatLayout
+from repro.fl.flatten import FlatLayout, ShardedFlatLayout
 
 
 @dataclasses.dataclass
@@ -52,12 +60,14 @@ class HFLSimulator:
     def __init__(self, schedule: HFLSchedule, loss_fn: Callable,
                  init_params, ue_data: List[dict], *, lr: float = 0.05,
                  solver: str = "gd", dane_mu: float = 0.1,
-                 samples_per_ue: Optional[int] = None, seed: int = 0):
+                 samples_per_ue: Optional[int] = None, seed: int = 0,
+                 mesh=None):
         self.schedule = schedule
         self.loss_fn = loss_fn
         self.lr = lr
         self.solver = solver
         self.dane_mu = dane_mu
+        self.mesh = mesh
         n = schedule.num_ues
         assert len(ue_data) == n, (len(ue_data), n)
 
@@ -77,39 +87,75 @@ class HFLSimulator:
         }
         self.batches = stacked                       # leaves (N, k, ...)
 
-        stacked_params = jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), init_params)
-        # Hot-loop state is the flat (N, F_total) buffer; the pytree form
-        # is materialized only at eval/checkpoint boundaries.
-        self._layout = FlatLayout.of(stacked_params)
-        self._flat = self._layout.ravel(stacked_params)
         # Aggregation weights: the paper's D_n (eq. 6/10).
         if schedule.problem is not None:
             self.weights = jnp.asarray(schedule.problem.samples, jnp.float32)
         else:
             self.weights = jnp.asarray(sizes, jnp.float32)
         self.group_ids = jnp.asarray(schedule.assoc.argmax(1), jnp.int32)
+
+        stacked_params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), init_params)
+        # Hot-loop state is the flat (N, F_total) buffer; the pytree form
+        # is materialized only at eval/checkpoint boundaries.  With a mesh
+        # the buffer (and the per-row hot inputs) live in the padded,
+        # group-aligned sharded form end-to-end.
+        self._layout = FlatLayout.of(stacked_params)
+        if mesh is not None:
+            self._slayout = ShardedFlatLayout.build(
+                self._layout, mesh, num_rows=n,
+                group_ids=np.asarray(self.group_ids))
+            sl = self._slayout
+            self._flat = jax.device_put(
+                sl.ravel(stacked_params), NamedSharding(mesh, sl.spec))
+            self._hot_batches = jax.device_put(
+                sl.pad_rows(self.batches), NamedSharding(mesh, sl.row_spec))
+            self._hot_weights = sl.pad_weights(self.weights)
+            self._hot_gids = sl.pad_rows(self.group_ids)
+        else:
+            self._slayout = None
+            self._flat = self._layout.ravel(stacked_params)
+            self._hot_batches = self.batches
+            self._hot_weights = self.weights
+            self._hot_gids = self.group_ids
         self._cloud_round = self._build_cloud_round()
+        # Weight-averaged train loss over ALL UEs (one vmap'd loss).
+        self._train_loss = jax.jit(
+            lambda gp, batches, w: jnp.sum(
+                (w / jnp.sum(w)) *
+                jax.vmap(lambda bb: loss_fn(gp, bb)[0])(batches)))
 
     # ------------------------------------------------------------------
 
     @property
     def params(self):
         """Stacked UE replicas, unravelled from the flat buffer."""
+        if self._slayout is not None:
+            return self._slayout.unravel(self._flat)
         return self._layout.unravel(self._flat)
 
     @params.setter
     def params(self, stacked):
-        self._flat = self._layout.ravel(stacked)
+        if self._slayout is not None:
+            self._flat = jax.device_put(
+                self._slayout.ravel(stacked),
+                NamedSharding(self.mesh, self._slayout.spec))
+        else:
+            self._flat = self._layout.ravel(stacked)
 
     def _build_cloud_round(self):
         a, b = self.schedule.a, self.schedule.b
         M = self.schedule.num_edges
         loss_fn, lr = self.loss_fn, self.lr
-        weights, group_ids = self.weights, self.group_ids
+        weights, group_ids = self._hot_weights, self._hot_gids
         solver = self.solver
         dane_mu = self.dane_mu
-        layout = self._layout
+        mesh = self.mesh
+        if self._slayout is not None:
+            unravel, ravel = (self._slayout.unravel_padded,
+                              self._slayout.ravel_padded)
+        else:
+            unravel, ravel = self._layout.unravel, self._layout.ravel
 
         local_gd = clients.gd_local_steps(loss_fn, a, lr)
         local_dane = clients.dane_local_steps(loss_fn, a, lr, mu_prox=dane_mu)
@@ -117,9 +163,10 @@ class HFLSimulator:
         def cloud_round(flat, batches):
             # The whole b-iteration edge loop carries the flat buffer;
             # unravel/ravel around local training are jit-fused reshapes,
-            # and each aggregation event is a single dispatch.
+            # and each aggregation event is a single dispatch (per-device
+            # under shard_map when a mesh is threaded through).
             def edge_round(_, buf):
-                p = layout.unravel(buf)
+                p = unravel(buf)
                 if solver == "dane":
                     g_bar = clients.global_gradient(loss_fn, p, batches, weights)
                     p = jax.vmap(lambda pp, bb: local_dane(pp, bb, g_bar))(
@@ -127,10 +174,10 @@ class HFLSimulator:
                 else:
                     p = jax.vmap(local_gd)(p, batches)
                 return aggregate.flat_edge_aggregate(
-                    layout.ravel(p), weights, group_ids, M)
+                    ravel(p), weights, group_ids, M, mesh=mesh)
 
             flat = jax.lax.fori_loop(0, b, edge_round, flat)
-            return aggregate.flat_cloud_aggregate(flat, weights)
+            return aggregate.flat_cloud_aggregate(flat, weights, mesh=mesh)
 
         # Donate the flat buffer so the cloud round updates it in place
         # (donation is a no-op warning on CPU, so only request it where
@@ -140,9 +187,9 @@ class HFLSimulator:
 
     def global_params(self):
         """The cloud model: weighted mean over UE replicas (eq. 10)."""
-        w = self.weights / jnp.sum(self.weights)
-        mean = jnp.tensordot(w, self._flat, axes=1)      # (F_total,)
-        return self._layout.unravel_single(mean)
+        w = self._hot_weights / jnp.sum(self._hot_weights)
+        mean = jnp.tensordot(w, self._flat, axes=1)      # (f_padded,)
+        return self._layout.unravel_single(mean[:self._layout.total])
 
     # ------------------------------------------------------------------
 
@@ -155,13 +202,12 @@ class HFLSimulator:
         clock = 0.0
         test_batch = jax.tree.map(jnp.asarray, test_batch)
         for r in range(rounds):
-            self._flat = self._cloud_round(self._flat, self.batches)
+            self._flat = self._cloud_round(self._flat, self._hot_batches)
             clock += t_round
             if (r + 1) % eval_every == 0 or r == rounds - 1:
                 gp = self.global_params()
                 loss, mets = self.loss_fn(gp, test_batch)
-                trl, _ = self.loss_fn(gp, jax.tree.map(lambda x: x[0],
-                                                       self.batches))
+                trl = self._train_loss(gp, self.batches, self.weights)
                 times.append(clock)
                 accs.append(float(mets.get("acc", jnp.nan)))
                 tlosses.append(float(loss))

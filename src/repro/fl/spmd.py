@@ -24,12 +24,10 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.fl import clients
+from repro.fl.aggregate import psum_weighted_mean, shard_map as _shard_map
 
-# jax.shard_map / jax.lax.pvary only exist on newer JAX; fall back to the
-# experimental home (0.4.x) where psum results need no re-marking.
-_shard_map = getattr(jax, "shard_map", None)
-if _shard_map is None:
-    from jax.experimental.shard_map import shard_map as _shard_map
+# jax.lax.pvary only exists on newer JAX; on 0.4.x psum results need no
+# re-marking.
 _pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
 
 
@@ -63,13 +61,11 @@ def make_hfl_cloud_round(loss_fn: Callable, mesh, *, a: int, b: int,
         def wavg(q, axis):
             # Single flat collective per aggregation event: ravel the
             # pytree into one contiguous vector so the psum is ONE
-            # all-reduce, not one per leaf (mirrors the flat-buffer
-            # aggregation of the simulation backend).
+            # all-reduce, not one per leaf (the same engine the sharded
+            # cloud aggregate of repro.fl.aggregate reduces through).
             flat, unravel = jax.flatten_util.ravel_pytree(
                 jax.tree.map(lambda x: x.astype(jnp.float32), q))
-            num = jax.lax.psum(w * flat, axis)
-            den = jax.lax.psum(w, axis)
-            return unravel(num / den)
+            return unravel(psum_weighted_mean(w * flat, w, axis))
 
         def edge_round(_, q):
             if solver == "dane":

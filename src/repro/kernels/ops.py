@@ -23,6 +23,26 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# ~16 MB of VMEM per TPU core; leave half for double-buffered pipelining.
+_AGG_VMEM_BUDGET = 8 * 2**20
+
+
+def pick_agg_blk_f(num_rows: int, num_groups: int, f_local: int) -> int:
+    """Feature-block width for the aggregation kernels, sized to VMEM.
+
+    One grid step holds fp32 (rows, blk_f) input + (rows, blk_f) output
+    blocks plus the (M, blk_f) accumulator/mean pair, so the working set is
+    ``4 * blk_f * (2*rows + 2*M)`` bytes.  Used by the sharded aggregation
+    engine to adapt the block width to each device's feature slab
+    (``f_local = f_padded / num_model``) instead of the fixed default.
+    """
+    rows = min(int(num_rows), ha.MAX_N_UNBLOCKED)
+    per_col = 4 * (2 * rows + 2 * max(int(num_groups), 1))
+    blk = _AGG_VMEM_BUDGET // max(per_col, 1)
+    blk = max(128, (blk // 128) * 128)
+    return int(min(blk, 2048, max(int(f_local), 8)))
+
+
 def _pad_to(x, axis: int, mult: int):
     s = x.shape[axis]
     pad = (-s) % mult

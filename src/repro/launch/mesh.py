@@ -14,6 +14,13 @@ POD_AXIS = "pod"
 DATA_AXIS = "data"
 MODEL_AXIS = "model"
 
+# Logical axis names of the flat (N, F_total) aggregation buffer
+# (repro.fl.flatten): 'ue' is the leading client axis (maps onto DATA_AXIS),
+# 'feat' is the flattened feature axis (maps onto MODEL_AXIS).  The rules
+# table in repro.parallel.sharding binds them to mesh axes.
+UE_AXIS = "ue"
+FEAT_AXIS = "feat"
+
 # TPU v5e hardware constants (per chip) used by the roofline analysis and by
 # the delay-model bridge (repro.core.schedule.plan_from_roofline).
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
@@ -47,6 +54,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """A small mesh over whatever devices exist (CPU tests/examples)."""
     devs = np.array(jax.devices()[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(devs, (DATA_AXIS, MODEL_AXIS))
+
+
+def make_agg_mesh(num_model: int, num_data: int = 1):
+    """('data', 'model') mesh for sharded flat-buffer aggregation.
+
+    The flat (N, F_total) buffer shards its UE axis over 'data' and its
+    feature axis over 'model' (logical axes UE_AXIS/FEAT_AXIS); built over
+    the first ``num_data * num_model`` devices so benchmarks can sweep
+    mesh sizes inside one forced-multi-device process.
+    """
+    n = num_data * num_model
+    devs = np.array(jax.devices()[:n]).reshape(num_data, num_model)
     return jax.sharding.Mesh(devs, (DATA_AXIS, MODEL_AXIS))
 
 

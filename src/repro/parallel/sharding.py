@@ -12,7 +12,8 @@ from typing import Optional
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
+from repro.launch.mesh import (DATA_AXIS, FEAT_AXIS, MODEL_AXIS, POD_AXIS,
+                               UE_AXIS)
 
 # Default rules: FSDP over 'data', TP over 'model', DP over 'pod'.
 # Params are sharded over 'data' (FSDP) on their largest non-TP dim and over
@@ -36,6 +37,10 @@ DEFAULT_RULES = {
     "act_embed": None,         # activation d_model dim
     "act_heads": MODEL_AXIS,   # activation heads dim
     "act_seq": None,           # residual-stream seq dim between layers
+    # Flat (N, F_total) aggregation buffer (repro.fl.flatten): clients over
+    # the data axis, features over the tensor-parallel axis.
+    UE_AXIS: DATA_AXIS,
+    FEAT_AXIS: MODEL_AXIS,
 }
 
 # Variant rule-sets used by perf hillclimbing (EXPERIMENTS.md §Perf).
@@ -138,6 +143,13 @@ def logical_to_sharding(mesh, logical_tree, shape_tree=None, rules=None):
         shape_tree,
         is_leaf=lambda x: x is None or (isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)),
     )
+
+
+def flat_buffer_spec(mesh, rules=None) -> P:
+    """PartitionSpec of the flat (N, F_total) aggregation buffer on ``mesh``:
+    UE rows over the data axis, feature columns over the model axis (only
+    the axes present in the mesh)."""
+    return spec_for(mesh, (UE_AXIS, FEAT_AXIS), rules)
 
 
 def constrain(x, mesh, logical: tuple, rules=None):

@@ -1,0 +1,168 @@
+"""Sharded flat-buffer aggregation == single-device path == pytree oracle.
+
+shard_map group semantics need real multiple devices and the pytest
+process keeps 1 CPU device (see conftest), so these tests shell out to a
+subprocess that forces an 8-device host platform — the same pattern as
+test_fl_spmd.  Covered: every ('data', 'model') factorization of 8,
+non-divisible F_total (padding round-trip), a zero-member edge, the
+Pallas kernels (interpret mode) under shard_map, and the end-to-end
+simulator trajectory with ``mesh=``.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+AGG_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import sys; sys.path.insert(0, sys.argv[1])
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.fl import aggregate
+    from repro.fl.flatten import FlatLayout, ShardedFlatLayout
+    from repro.launch.mesh import make_agg_mesh
+
+    rng = np.random.default_rng(0)
+    # F=1001 is odd, so EVERY multi-model mesh needs real feature padding;
+    # group 1 has zero members (exercises the empty-edge path).
+    N, F, M = 24, 1001, 3
+    x = jnp.asarray(rng.normal(0, 1, (N, F)), jnp.float32)
+    w = jnp.asarray(rng.uniform(1, 5, N), jnp.float32)
+    gid = jnp.asarray(rng.choice([0, 2], N), jnp.int32)
+
+    # pytree oracle: per-group weighted mean scattered back
+    wn, gn = np.asarray(w, np.float64), np.asarray(gid)
+    xo = np.asarray(x, np.float64)
+    oracle_edge = np.zeros_like(xo)
+    for g in range(M):
+        mask = gn == g
+        if mask.any():
+            mean = (wn[mask, None] * xo[mask]).sum(0) / wn[mask].sum()
+            oracle_edge[mask] = mean
+    oracle_cloud = np.broadcast_to((wn[:, None] * xo).sum(0) / wn.sum(),
+                                   xo.shape)
+
+    single_edge = np.asarray(aggregate.flat_edge_aggregate(x, w, gid, M))
+    single_cloud = np.asarray(aggregate.flat_cloud_aggregate(x, w))
+    np.testing.assert_allclose(single_edge, oracle_edge, atol=1e-5)
+    np.testing.assert_allclose(single_cloud, oracle_cloud, atol=1e-5)
+
+    layout = FlatLayout.of({"a": x.reshape(N, 7, 143)})
+    for (d, m) in [(1, 8), (2, 4), (4, 2), (8, 1), (1, 1)]:
+        mesh = make_agg_mesh(m, d)
+        sl = ShardedFlatLayout.build(layout, mesh, num_rows=N,
+                                     group_ids=np.asarray(gid))
+        assert sl.f_padded % max(sl.num_model, 1) == 0
+        assert sl.n_padded % max(sl.num_data, 1) == 0
+        assert sl.f_padded > F or m == 1   # padding really happens
+        buf = sl.pad(x)
+        # padding round-trip is exact
+        np.testing.assert_array_equal(np.asarray(sl.unpad(buf)),
+                                      np.asarray(x))
+        hw, hg = sl.pad_weights(w), sl.pad_rows(gid)
+        for uk in (False, True):   # jnp body AND Pallas kernels (interpret)
+            oe = sl.unpad(aggregate.flat_edge_aggregate(
+                buf, hw, hg, M, mesh=mesh, use_kernel=uk))
+            oc = sl.unpad(aggregate.flat_cloud_aggregate(
+                buf, hw, mesh=mesh, use_kernel=uk))
+            np.testing.assert_allclose(np.asarray(oe), single_edge,
+                                       atol=1e-5)
+            np.testing.assert_allclose(np.asarray(oe), oracle_edge,
+                                       atol=1e-5)
+            np.testing.assert_allclose(np.asarray(oc), single_cloud,
+                                       atol=1e-5)
+            np.testing.assert_allclose(np.asarray(oc), oracle_cloud,
+                                       atol=1e-5)
+        print(f"OK data={d} model={m}")
+    print("OK all")
+""")
+
+SIM_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import sys; sys.path.insert(0, sys.argv[1])
+    import numpy as np, jax
+    from repro.core import schedule
+    from repro.core.problem import HFLProblem
+    from repro.data import partition, synthetic
+    from repro.fl.sim import HFLSimulator
+    from repro.launch.mesh import make_agg_mesh
+    from repro.models import lenet
+
+    prob = HFLProblem(num_edges=2, num_ues=8, epsilon=0.25, seed=0,
+                      samples_lo=50, samples_hi=120)
+    sch = schedule.plan(prob)
+    train = synthetic.logreg_data(seed=0, n=800, dim=12, num_classes=4)
+    test = synthetic.logreg_data(seed=1, n=200, dim=12, num_classes=4)
+    rng = np.random.default_rng(0)
+    parts = partition.size_partition(rng, 800, prob.samples.astype(int))
+    ue_data = [{k: train[k][ix] for k in train} for ix in parts]
+    init = lenet.logreg_init(jax.random.PRNGKey(0), 12, 4)
+    loss_fn = lambda p, b: lenet.logreg_loss(p, b, l2=1e-3)
+
+    for solver in ("gd", "dane"):
+        ref = HFLSimulator(sch, loss_fn, init, ue_data, lr=0.02,
+                           solver=solver)
+        r0 = ref.run(test, rounds=2)
+        for (d, m) in [(2, 4), (1, 4)]:
+            sim = HFLSimulator(sch, loss_fn, init, ue_data, lr=0.02,
+                               solver=solver, mesh=make_agg_mesh(m, d))
+            r1 = sim.run(test, rounds=2)
+            np.testing.assert_allclose(r1.test_acc, r0.test_acc, atol=1e-5)
+            np.testing.assert_allclose(r1.test_loss, r0.test_loss, atol=1e-5)
+            np.testing.assert_allclose(r1.train_loss, r0.train_loss,
+                                       atol=1e-5)
+            for a, b in zip(jax.tree.leaves(sim.params),
+                            jax.tree.leaves(ref.params)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-5)
+            print(f"OK {solver} data={d} model={m}")
+    print("OK all")
+""")
+
+
+def _run(script):
+    r = subprocess.run([sys.executable, "-c", script, SRC],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK all" in r.stdout
+
+
+@pytest.mark.slow
+def test_sharded_aggregate_matches_flat_and_oracle():
+    _run(AGG_SCRIPT)
+
+
+@pytest.mark.slow
+def test_simulator_mesh_trajectory_parity():
+    _run(SIM_SCRIPT)
+
+
+def test_sharded_layout_padding_round_trip_single_device():
+    """Padding/permutation logic is pure host math — also check it in the
+    1-device pytest process (non-divisible F, unbalanced groups)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.fl.flatten import FlatLayout, ShardedFlatLayout
+    from repro.launch.mesh import make_agg_mesh
+
+    rng = np.random.default_rng(3)
+    N, F = 10, 37
+    x = jnp.asarray(rng.normal(0, 1, (N, F)), jnp.float32)
+    gid = np.asarray([0, 0, 0, 0, 0, 1, 1, 2, 2, 2])
+    layout = FlatLayout.of({"a": x})
+    mesh = make_agg_mesh(1, 1)
+    sl = ShardedFlatLayout.build(layout, mesh, num_rows=N, group_ids=gid)
+    assert sl.f_padded == F and sl.n_padded == N
+    np.testing.assert_array_equal(np.asarray(sl.unpad(sl.pad(x))),
+                                  np.asarray(x))
+    w = jnp.asarray(rng.uniform(1, 2, N), jnp.float32)
+    np.testing.assert_allclose(np.asarray(sl.pad_weights(w)),
+                               np.asarray(w))
