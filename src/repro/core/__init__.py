@@ -1,12 +1,17 @@
 """The paper's contribution: hierarchical-FL time minimization.
 
 * ``problem``  — HFLProblem: wireless/compute topology (§III, §V-A).
-* ``delay``    — delay model eqs. (1)-(8) and objective (13)/(15).
+* ``delay``    — delay model eqs. (1)-(8), objective (13)/(15), and the
+  async completion-time extension (``edge_cycle_time``/``async_completion``).
 * ``iteropt``  — sub-problem I: optimal (a, b); Alg. 2 dual + direct solver.
 * ``assoc``    — sub-problem II: Alg. 3 association + baselines.
 * ``schedule`` — HFLSchedule + TPU roofline bridge (hardware adaptation).
+* ``events``   — BEYOND-PAPER event-driven async edge-round timeline with
+  SSP staleness gating (degenerates to the eq. 34 barrier at bound 0).
 """
+from repro.core.events import AsyncTimeline, simulate_async
 from repro.core.problem import HFLProblem
 from repro.core.schedule import HFLSchedule, plan, plan_from_roofline
 
-__all__ = ["HFLProblem", "HFLSchedule", "plan", "plan_from_roofline"]
+__all__ = ["AsyncTimeline", "HFLProblem", "HFLSchedule", "plan",
+           "plan_from_roofline", "simulate_async"]

@@ -190,7 +190,9 @@ def _latency_terms(problem: HFLProblem, a: float):
 
 
 def refined(problem: HFLProblem, a: float = 10.0,
-            max_moves: int = 500, incremental: bool = True) -> np.ndarray:
+            max_moves: int = 500, incremental: bool = True,
+            objective: str = "latency", b: float = 3.0, rounds: int = 8,
+            max_staleness: int = 2) -> np.ndarray:
     """BEYOND-PAPER: Alg. 3 + bottleneck local search.
 
     Alg. 3 maximizes selected SNR, which is a proxy for the true objective
@@ -198,16 +200,36 @@ def refined(problem: HFLProblem, a: float = 10.0,
     the bottleneck UE (the argmax of a*t_cmp + t_com) and move it to the
     edge that minimizes the resulting SYSTEM latency (bandwidth re-splits
     included), until no move improves.  Each accepted move strictly lowers
-    max-latency, so it terminates.  Reported separately in EXPERIMENTS.md
+    the objective, so it terminates.  Reported separately in EXPERIMENTS.md
     §Perf (paper-faithful Alg. 3 is the baseline).
 
-    ``incremental=True`` (default) evaluates each trial move by DELTA: a
-    move only changes the two touched edges' latencies, so re-scoring is
-    O(members) + O(M) instead of the full O(N*M) ``association_latency``
-    recompute (the legacy path, kept for the bench comparison in
-    ``benchmarks/bench_association.py``).
+    ``objective`` selects what the search descends:
+
+    * ``"latency"`` (default) — eq. 38's max per-UE latency, the paper's
+      sub-problem II objective;
+    * ``"async_makespan"`` — the event-driven async completion time
+      (``delay.async_completion`` with this ``b``/``rounds``/
+      ``max_staleness``): the association is tuned for the STALENESS-
+      BOUNDED regime, where balancing whole edge cycles matters more than
+      the single worst UE.  Scored by full timeline simulation, so only
+      the full-recompute search path applies (small N, M instances).
+
+    ``incremental=True`` (default, latency objective only) evaluates each
+    trial move by DELTA: a move only changes the two touched edges'
+    latencies, so re-scoring is O(members) + O(M) instead of the full
+    O(N*M) ``association_latency`` recompute (the legacy path, kept for
+    the bench comparison in ``benchmarks/bench_association.py``).
     """
     cap = capacity_of(problem)
+    if objective == "async_makespan":
+        def score(A):
+            return delay.async_completion(
+                problem, A, a, b, rounds=rounds,
+                max_staleness=max_staleness)["makespan"]
+        return _refined_full_recompute(problem, a, max_moves, cap,
+                                       score=score)
+    if objective != "latency":
+        raise ValueError(f"unknown refined objective {objective!r}")
     if not incremental:
         return _refined_full_recompute(problem, a, max_moves, cap)
     t_fix, t_unit = _latency_terms(problem, a)
@@ -315,11 +337,16 @@ def refined(problem: HFLProblem, a: float = 10.0,
 
 
 def _refined_full_recompute(problem: HFLProblem, a: float, max_moves: int,
-                            cap: int) -> np.ndarray:
-    """Legacy trial evaluation: full association_latency per candidate
-    move.  Same search; the bench times it against the incremental path."""
+                            cap: int, score=None) -> np.ndarray:
+    """Full-recompute trial evaluation: ``score(assoc)`` per candidate move
+    (default: eq. 38 ``association_latency``).  Same bottleneck search as
+    the incremental path; also carries the pluggable async-makespan
+    objective, and the bench times it against the incremental path."""
+    if score is None:
+        def score(A):
+            return delay.association_latency(problem, A, a)
     assoc = proposed(problem)
-    cur = delay.association_latency(problem, assoc, a)
+    cur = score(assoc)
     t_cmp = problem.t_cmp()
     N = problem.num_ues
     for _ in range(max_moves):
@@ -335,7 +362,7 @@ def _refined_full_recompute(problem: HFLProblem, a: float, max_moves: int,
                     continue
                 trial = assoc.copy()
                 trial[n, m_cur], trial[n, m] = 0, 1
-                v = delay.association_latency(problem, trial, a)
+                v = score(trial)
                 if v < best_val - 1e-12:
                     best_val, best_trial = v, trial
             # swap with a UE on another edge (escapes capacity-tight minima)
@@ -346,7 +373,7 @@ def _refined_full_recompute(problem: HFLProblem, a: float, max_moves: int,
                 trial = assoc.copy()
                 trial[n, m_cur], trial[n, m2] = 0, 1
                 trial[n2, m2], trial[n2, m_cur] = 0, 1
-                v = delay.association_latency(problem, trial, a)
+                v = score(trial)
                 if v < best_val - 1e-12:
                     best_val, best_trial = v, trial
             if best_trial is not None:

@@ -1,4 +1,5 @@
-"""Delay model — eqs. (1)–(8) and the objective of problem (13).
+"""Delay model — eqs. (1)–(8), the objective of problem (13), and the
+BEYOND-PAPER asynchronous completion-time distribution.
 
 All functions are pure numpy over an ``HFLProblem`` instance and an
 association matrix ``assoc`` of shape (N, M) with 0/1 entries, one 1 per row.
@@ -8,6 +9,14 @@ Objective (eq. 13):
     total(a, b, chi) = R(a,b,eps) * T(a,b,chi)
     T  = max_m { b * tau_m + t_{m->c} }          (eq. 34)
     tau_m = max_{n in N_m} { a * t_cmp_n + t_com_{n->m} }   (eq. 33)
+
+Async extension (``edge_cycle_time`` / ``async_completion``): drop eq. 34's
+outer max (the cloud barrier) and let each edge repeat its own cycle
+``c_m = b * tau_m + t_{m->c}`` on an event-driven clock
+(``repro.core.events``), merging at the cloud on arrival with a bounded
+staleness lag.  ``async_completion`` reports the resulting makespan for the
+same communication work as ``rounds`` synchronous cloud rounds, which is
+<= the eq. 34 bound ``rounds * T`` (equal at ``max_staleness=0``).
 """
 from __future__ import annotations
 
@@ -15,6 +24,7 @@ from typing import Tuple
 
 import numpy as np
 
+from repro.core import events
 from repro.core.problem import HFLProblem
 
 
@@ -64,12 +74,10 @@ def edge_round_time(problem: HFLProblem, assoc: np.ndarray, a) -> np.ndarray:
 
 
 def cloud_round_time(problem: HFLProblem, assoc: np.ndarray, a, b) -> float:
-    """T (eq. 34): max_m { b * tau_m + t_{m->c} }."""
-    tau = edge_round_time(problem, assoc, a)
-    t_mc = problem.t_edge_cloud()
-    active = assoc.sum(0) > 0
-    vals = np.asarray(b, float) * tau + np.where(active, t_mc, 0.0)
-    return float(vals.max())
+    """T (eq. 34): max_m { b * tau_m + t_{m->c} } — the max of the
+    per-edge cycle times (``edge_cycle_time``), so the synchronous bound
+    and the async timeline share one float-identical formula."""
+    return float(edge_cycle_time(problem, assoc, a, b).max())
 
 
 def total_delay(problem: HFLProblem, assoc: np.ndarray, a, b) -> float:
@@ -99,3 +107,62 @@ def association_latency(problem: HFLProblem, assoc: np.ndarray, a) -> float:
     """Objective of sub-problem II (eq. 38): max_n { a t_cmp + t_com }."""
     t = np.asarray(a, float) * problem.t_cmp() + problem.t_com(assoc)
     return float(t.max())
+
+
+# ---------------------------------------------------------------------------
+# BEYOND-PAPER: asynchronous completion-time distribution.
+# ---------------------------------------------------------------------------
+
+
+def edge_cycle_time(problem: HFLProblem, assoc: np.ndarray, a, b) -> np.ndarray:
+    """Per-edge full cycle ``c_m = b * tau_m + t_{m->c}``, shape (M,).
+
+    This is the per-edge term INSIDE eq. 34's max: one complete pass of b
+    edge rounds (eq. 33 each) plus the edge->cloud upload (eq. 8).  The
+    synchronous bound is ``T = max_m c_m``; the async timeline lets each
+    edge repeat ``c_m`` at its own clock.  Edges with no associated UEs
+    contribute 0 (they never participate).
+    """
+    tau = edge_round_time(problem, assoc, a)
+    active = assoc.sum(0) > 0
+    return np.asarray(b, float) * tau + np.where(active,
+                                                 problem.t_edge_cloud(), 0.0)
+
+
+def async_completion(problem: HFLProblem, assoc: np.ndarray, a, b, *,
+                     rounds: int, max_staleness: int) -> dict:
+    """Event-driven async completion-time statistics vs. the eq. 34 bound.
+
+    Simulates ``rounds * M_active`` edge->cloud deliveries (the same
+    communication work as ``rounds`` synchronous cloud rounds) over the
+    per-edge cycle times with SSP staleness gating (``repro.core.events``).
+
+    Returns a dict with the timeline and the headline quantities:
+
+    * ``makespan``        — async wall clock for the delivery quota;
+    * ``sync_makespan``   — the synchronous bound ``rounds * T`` (eq. 34);
+    * ``speedup``         — sync_makespan / makespan (1.0 at max_staleness=0);
+    * ``cloud_idle_frac`` — longest no-arrival window / makespan;
+    * ``edge_busy_frac``  — (M,) per-edge compute fraction (0 for inactive);
+    * ``arrivals``        — (t, edge, cycle, staleness) per delivery, in
+      global edge indices.
+    """
+    active = np.flatnonzero(np.asarray(assoc).sum(0) > 0)
+    cycles = edge_cycle_time(problem, assoc, a, b)
+    tl = events.simulate_async(cycles[active], rounds=int(rounds),
+                               max_staleness=int(max_staleness))
+    sync = float(rounds) * cloud_round_time(problem, assoc, a, b)
+    busy = np.zeros(problem.num_edges)
+    busy[active] = tl.edge_busy_frac()
+    arrivals = [(u.t, int(active[e]), int(c), int(s))
+                for u in tl.updates for e, c, s in u.merges]
+    return {
+        "timeline": tl,
+        "active_edges": active,
+        "makespan": tl.makespan,
+        "sync_makespan": sync,
+        "speedup": sync / tl.makespan if tl.makespan > 0 else 1.0,
+        "cloud_idle_frac": tl.cloud_idle_frac(),
+        "edge_busy_frac": busy,
+        "arrivals": arrivals,
+    }

@@ -1,0 +1,214 @@
+"""Event-driven asynchronous edge-round timeline — BEYOND-PAPER.
+
+The paper's delay model is fully synchronous: every edge waits for the
+slowest of its UEs (tau_m, eq. 33) and the cloud waits for the slowest
+edge (T, eq. 34), so one cloud round costs ``T = max_m { b tau_m + t_mc }``
+and a job of R rounds costs exactly ``R * T`` no matter how heterogeneous
+the fleet is.  This module relaxes the cloud barrier: each edge m runs its
+full cycle ``c_m = b * tau_m + t_{m->c}`` at its OWN simulated clock and
+re-enters immediately; the cloud aggregates whenever an edge's model
+arrives (the FedAsync/HierFAVG regime of Liu et al. 2019 and the
+delay-efficient scheduling analysis of Prakash et al. 2021).
+
+Staleness control (SSP-style, bounded by ``max_staleness``):
+
+* an edge that has completed ``k`` cycles may START its next cycle only if
+  ``k - min_m completed_m <= max_staleness`` — fast edges run at most
+  ``max_staleness`` cycles ahead of the slowest, then idle at the gate;
+* each merge records the edge's VERSION LAG (number of cloud updates
+  applied since the edge departed); the simulator decays the edge's
+  aggregation weight by it (see ``repro.fl.sim``).  The cycle gate bounds
+  the version lag by ``M * (max_staleness + 1)``.
+* ``max_staleness=0`` degenerates EXACTLY to the synchronous path: no edge
+  may run ahead, arrivals are held until all M edges have delivered, and
+  the cloud applies one barrier merge of all edges at ``max_m`` arrival
+  time — reproducing eq. 34 event-for-event.
+
+Fairness of the sync-vs-async comparison: the engine terminates after
+``rounds * M`` single-edge deliveries — the same communication work the
+synchronous schedule performs in ``rounds`` cloud rounds — so the async
+makespan is directly comparable to the eq. 34 bound ``rounds * T``.
+
+Determinism: the event queue is keyed ``(time, edge, cycle)``, so tied
+timestamps resolve by edge index and the trace is bit-identical across
+runs; gated edges are released in edge-index order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Departure:
+    """Edge ``edge`` starts ``cycle`` (1-based) at time ``t`` carrying the
+    cloud model at ``version``."""
+    t: float
+    edge: int
+    cycle: int
+    version: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudUpdate:
+    """Cloud aggregation event at time ``t`` producing model ``version``.
+
+    ``merges`` is a tuple of ``(edge, cycle, staleness)`` in deterministic
+    arrival order (ties by edge index); ``staleness`` is the edge's version
+    lag — cloud updates applied since that edge departed.  Barrier merges
+    (``max_staleness=0``) carry all M edges with staleness 0.
+    """
+    t: float
+    version: int
+    merges: Tuple[Tuple[int, int, int], ...]
+
+
+@dataclasses.dataclass
+class AsyncTimeline:
+    """Full trace of one async run + its summary statistics.
+
+    ``trace`` interleaves ``("depart", Departure)`` / ``("update",
+    CloudUpdate)`` records in exact occurrence order — the FL simulator
+    replays it verbatim (``repro.fl.sim`` mode="async").
+    """
+    num_edges: int
+    rounds: int
+    max_staleness: int
+    cycle_times: np.ndarray              # (M,) b*tau_m + t_mc per edge
+    departures: List[Departure]
+    updates: List[CloudUpdate]
+    trace: List[tuple]
+    makespan: float                      # quota-filling update time - start
+    start: float = 0.0
+
+    # -- summary statistics -------------------------------------------------
+
+    @property
+    def update_times(self) -> np.ndarray:
+        return np.asarray([u.t for u in self.updates])
+
+    def update_gaps(self) -> np.ndarray:
+        """Gaps between consecutive cloud updates (first gap measured from
+        the run's ``start``)."""
+        t = self.update_times
+        return np.diff(np.concatenate([[self.start], t]))
+
+    def cloud_idle_frac(self) -> float:
+        """Longest stretch without cloud news, as a fraction of makespan.
+
+        Synchronous schedules score ``T / (R*T) = 1/R`` (the cloud hears
+        nothing for a full round); async merges arrive spread out, so the
+        worst silent window shrinks toward ``max_m c_m / makespan / b``.
+        """
+        if not self.updates or self.makespan <= 0:
+            return 0.0
+        return float(self.update_gaps().max() / self.makespan)
+
+    def merges_per_edge(self) -> np.ndarray:
+        """(M,) deliveries each edge contributed to the quota."""
+        out = np.zeros(self.num_edges, dtype=np.int64)
+        for u in self.updates:
+            for e, _, _ in u.merges:
+                out[e] += 1
+        return out
+
+    def edge_busy_frac(self) -> np.ndarray:
+        """(M,) fraction of the makespan each edge spent computing (its
+        merged cycles x its cycle time); the complement is gate idle time."""
+        if self.makespan <= 0:
+            return np.zeros(self.num_edges)
+        return self.merges_per_edge() * self.cycle_times / self.makespan
+
+    def max_staleness_seen(self) -> int:
+        return max((s for u in self.updates for _, _, s in u.merges),
+                   default=0)
+
+
+def simulate_async(cycle_times, *, rounds: int, max_staleness: int,
+                   start: float = 0.0) -> AsyncTimeline:
+    """Run the event-driven timeline over per-edge cycle times.
+
+    cycle_times: (M,) positive floats, one full edge cycle each
+                 (``b * tau_m + t_{m->c}``, the per-edge term of eq. 34).
+    rounds:      synchronous-equivalent cloud rounds; the engine stops after
+                 ``rounds * M`` deliveries (equal communication work).
+    max_staleness: SSP cycle-lead bound; 0 = exact synchronous barrier.
+    """
+    cycle_times = np.asarray(cycle_times, dtype=float)
+    M = cycle_times.shape[0]
+    if M == 0:
+        raise ValueError("need at least one (active) edge")
+    if np.any(cycle_times <= 0):
+        raise ValueError("cycle times must be positive (drop inactive edges)")
+    if rounds < 1 or max_staleness < 0:
+        raise ValueError("rounds >= 1 and max_staleness >= 0 required")
+
+    quota = rounds * M
+    departures: List[Departure] = []
+    updates: List[CloudUpdate] = []
+    trace: List[tuple] = []
+    heap: list = []                       # (arrival_t, edge, cycle)
+    completed = np.zeros(M, dtype=np.int64)   # merged deliveries per edge
+    dep_version = np.zeros(M, dtype=np.int64)
+    version = 0
+    delivered = 0
+
+    def depart(m: int, cycle: int, t: float) -> None:
+        d = Departure(t=t, edge=m, cycle=cycle, version=version)
+        departures.append(d)
+        trace.append(("depart", d))
+        dep_version[m] = version
+        heapq.heappush(heap, (t + cycle_times[m], m, cycle))
+
+    for m in range(M):
+        depart(m, 1, start)
+
+    if max_staleness == 0:
+        # Barrier mode: hold arrivals until every edge has delivered this
+        # cycle, then apply ONE merge of all M at the slowest arrival time.
+        pending: List[Tuple[float, int, int]] = []
+        while heap and delivered < quota:
+            t, m, c = heapq.heappop(heap)
+            pending.append((t, m, c))
+            if len(pending) < M:
+                continue
+            version += 1
+            u = CloudUpdate(t=t, version=version,
+                            merges=tuple((mm, cc, 0) for _, mm, cc in pending))
+            updates.append(u)
+            trace.append(("update", u))
+            completed[:] = c
+            delivered += M
+            pending = []
+            if delivered < quota:
+                for mm in range(M):
+                    depart(mm, c + 1, t)
+    else:
+        gated: set = set()
+        while heap and delivered < quota:
+            t, m, c = heapq.heappop(heap)
+            version += 1
+            u = CloudUpdate(t=t, version=version,
+                            merges=((m, c, int(version - 1 - dep_version[m])),))
+            updates.append(u)
+            trace.append(("update", u))
+            completed[m] = c
+            delivered += 1
+            if delivered >= quota:
+                break
+            gated.add(m)
+            floor = int(completed.min())
+            for mm in sorted(gated):
+                if completed[mm] - floor <= max_staleness:
+                    depart(mm, int(completed[mm]) + 1, t)
+                    gated.discard(mm)
+
+    makespan = (updates[-1].t - start) if updates else 0.0
+    return AsyncTimeline(num_edges=M, rounds=rounds,
+                         max_staleness=max_staleness,
+                         cycle_times=cycle_times, departures=departures,
+                         updates=updates, trace=trace, makespan=makespan,
+                         start=start)

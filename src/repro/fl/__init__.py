@@ -7,12 +7,15 @@
 * ``clients``   — local solvers: full-batch GD (paper) and DANE [22].
 * ``sim``       — simulation backend: vmap over stacked UE replicas with a
   simulated wall clock driven by the delay model (Figs. 4/6); carries the
-  flat buffer through the b-iteration edge loop.
+  flat buffer through the b-iteration edge loop.  ``mode="async"`` swaps
+  the eq. 34 barrier clock for the event-driven staleness-bounded
+  timeline (``repro.core.events``).
 * ``spmd``      — SPMD backend: shard_map over an ('edge','ue') mesh with
   one flat grouped psum every ``a`` steps and a global one every ``a*b``
   (the TPU adaptation — edge = pod, cloud = cross-pod DCN).
 """
 from repro.fl.aggregate import (flat_cloud_aggregate, flat_edge_aggregate,
+                                flat_staleness_merge,
                                 stacked_weighted_average, weighted_average)
 from repro.fl.flatten import FlatLayout
 from repro.fl.sim import HFLSimulator, SimResult
@@ -20,6 +23,7 @@ from repro.fl.spmd import hfl_spmd_round, make_hfl_cloud_round
 
 __all__ = [
     "weighted_average", "stacked_weighted_average",
-    "flat_cloud_aggregate", "flat_edge_aggregate", "FlatLayout",
+    "flat_cloud_aggregate", "flat_edge_aggregate", "flat_staleness_merge",
+    "FlatLayout",
     "HFLSimulator", "SimResult", "hfl_spmd_round", "make_hfl_cloud_round",
 ]

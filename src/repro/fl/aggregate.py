@@ -51,13 +51,13 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.fl.flatten import FlatLayout
 from repro.kernels.ops import (hier_aggregate, hier_cloud_aggregate,
                                hier_segment_aggregate, pick_agg_blk_f)
 from repro.launch.mesh import DATA_AXIS, MODEL_AXIS
-from repro.parallel.sharding import flat_buffer_spec
+from repro.parallel.sharding import (flat_buffer_col_spec,
+                                     flat_buffer_row_spec, flat_buffer_spec)
 
 # jax.shard_map only exists on newer JAX; fall back to the experimental
 # home (0.4.x).  repro.fl.spmd shares this resolved symbol.
@@ -108,7 +108,8 @@ def weighted_average(params_list: Sequence, weights: Sequence[float]):
 
 
 def psum_weighted_mean(num, den, axis):
-    """ONE-collective weighted mean inside shard_map/pmap.
+    """ONE-collective weighted mean inside shard_map/pmap (eq. 10's
+    ``sum_n D_n w_n / sum_n D_n`` with the sums split across devices).
 
     ``num`` is the locally pre-weighted numerator vector, ``den`` the local
     weight sum; they are concatenated so the cross-device reduction is a
@@ -118,6 +119,29 @@ def psum_weighted_mean(num, den, axis):
     v = jnp.concatenate([num, jnp.reshape(den, (1,)).astype(num.dtype)])
     v = jax.lax.psum(v, axis)
     return v[:-1] / v[-1]
+
+
+def psum_staleness_merge(global_vec, num, wd_sum, w_total, axis):
+    """Staleness-weighted variant of ``psum_weighted_mean`` — the async
+    cloud-merge rule (BEYOND-PAPER; FedAsync-style mixing).
+
+    Inside shard_map each device contributes its local decayed-weight
+    numerator ``num = sum_n w_n d_n row_n`` and scalar mass
+    ``wd_sum = sum_n w_n d_n`` (``d_n = decay**staleness`` for rows of
+    arrived edges, 0 otherwise); one psum of ``len(num) + 1`` floats later
+    the cloud model updates as
+
+        g <- (1 - Lambda) g + psum(num) / W,   Lambda = psum(wd_sum) / W
+
+    with ``W = sum_n w_n`` the TOTAL fleet weight (eq. 10's denominator,
+    passed in — it is static, no collective needed).  When every edge has
+    arrived with staleness 0, Lambda == 1 and this reduces EXACTLY to
+    eq. 10's weighted mean — the ``max_staleness=0`` parity path.
+    """
+    v = jnp.concatenate([num, jnp.reshape(wd_sum, (1,)).astype(num.dtype)])
+    v = jax.lax.psum(v, axis)
+    lam = v[-1] / w_total
+    return (1.0 - lam) * global_vec + v[:-1] / w_total
 
 
 # ---------------------------------------------------------------------------
@@ -168,7 +192,7 @@ def flat_cloud_aggregate(buf, weights, *, use_kernel: Optional[bool] = None,
     nd = _axis_size(mesh, DATA_AXIS)
     nm = _axis_size(mesh, MODEL_AXIS)
     spec = flat_buffer_spec(mesh)
-    row_spec = P(spec[0] if len(spec) else None)
+    row_spec = flat_buffer_row_spec(mesh)
     blk = pick_agg_blk_f(buf.shape[0] // nd, 1, buf.shape[1] // nm)
 
     if nd == 1:
@@ -215,7 +239,7 @@ def flat_edge_aggregate(buf, weights, group_ids, num_groups: int, *,
     nd = _axis_size(mesh, DATA_AXIS)
     nm = _axis_size(mesh, MODEL_AXIS)
     spec = flat_buffer_spec(mesh)
-    row_spec = P(spec[0] if len(spec) else None)
+    row_spec = flat_buffer_row_spec(mesh)
     blk = pick_agg_blk_f(buf.shape[0] // nd, ng, buf.shape[1] // nm)
 
     def local_fn(b, w, g):
@@ -223,6 +247,57 @@ def flat_edge_aggregate(buf, weights, group_ids, num_groups: int, *,
 
     fn = _shard_map_norep(local_fn, mesh, (spec, row_spec, row_spec), spec)
     return fn(buf, weights, group_ids)
+
+
+def flat_staleness_merge(global_vec, buf, eff_weights, w_total, *, mesh=None):
+    """Async cloud merge (BEYOND-PAPER): staleness-weighted update of the
+    cloud model from the arrived edges' rows of the flat buffer.
+
+    global_vec:  (F,) fp32 cloud model (padded F under ``mesh``);
+    buf:         (N, F) flat buffer (padded/sharded form under ``mesh``);
+    eff_weights: (N,) effective row weights ``w_n * decay**staleness`` for
+                 members of arrived edges, 0 for everything else (including
+                 padding rows);
+    w_total:     python float, TOTAL fleet weight ``sum_n w_n`` (eq. 10's
+                 denominator — static, so no collective is spent on it).
+
+    Update rule (reduces to eq. 10 when all edges arrive with staleness 0,
+    i.e. the ``max_staleness=0`` barrier — that is the sync-parity path):
+
+        g <- (1 - Lambda) g + sum_n eff_n row_n / W,  Lambda = sum_n eff_n / W
+
+    With ``mesh`` the merge runs under shard_map reusing the ONE-collective
+    pattern of the sharded cloud aggregate: each device reduces its own
+    slab and the partials meet in a single psum over 'data'
+    (``psum_staleness_merge``); feature columns never leave their shard.
+    """
+    eff_weights = jnp.asarray(eff_weights, jnp.float32)
+    w_total = float(w_total)
+    g32 = global_vec.astype(jnp.float32)
+    if mesh is None or _trivial_mesh(mesh):
+        num = jnp.tensordot(eff_weights, buf.astype(jnp.float32), axes=1)
+        lam = jnp.sum(eff_weights) / w_total
+        return (1.0 - lam) * g32 + num / w_total
+
+    nd = _axis_size(mesh, DATA_AXIS)
+    spec = flat_buffer_spec(mesh)
+    row_spec = flat_buffer_row_spec(mesh)
+    col_spec = flat_buffer_col_spec(mesh)
+
+    if nd == 1:
+        def local_fn(g, b, w):
+            num = jnp.tensordot(w, b.astype(jnp.float32), axes=1)
+            lam = jnp.sum(w) / w_total
+            return (1.0 - lam) * g + num / w_total
+    else:
+        def local_fn(g, b, w):
+            num = jnp.tensordot(w, b.astype(jnp.float32), axes=1)
+            return psum_staleness_merge(g, num, jnp.sum(w), w_total,
+                                        DATA_AXIS)
+
+    fn = _shard_map_norep(local_fn, mesh, (col_spec, spec, row_spec),
+                          col_spec)
+    return fn(g32, buf, eff_weights)
 
 
 # ---------------------------------------------------------------------------

@@ -60,7 +60,8 @@ class FlatLayout:
 
     @classmethod
     def of(cls, stacked) -> "FlatLayout":
-        """Layout of a STACKED pytree (every leaf ``(N, *shape)``)."""
+        """Layout of a STACKED pytree (every leaf ``(N, *shape)``) — the
+        shape the aggregation events (eqs. 6/10) reduce over."""
         leaves, treedef = jax.tree.flatten(stacked)
         shapes = tuple(tuple(l.shape[1:]) for l in leaves)
         dtypes = tuple(l.dtype for l in leaves)
@@ -90,7 +91,12 @@ class FlatLayout:
     # -- stacked round-trip ---------------------------------------------
 
     def ravel(self, stacked):
-        """Pack a stacked pytree into one ``(N, F_total)`` fp32 buffer."""
+        """Pack a stacked pytree into one ``(N, F_total)`` fp32 buffer.
+
+        Derivation: eqs. 6/10 apply the SAME weighted mean to every leaf,
+        so concatenating the flattened leaves turns the whole event into
+        one row-space reduction; under jit the reshapes/concat fuse to
+        (nearly) free layout ops."""
         leaves = self.treedef.flatten_up_to(stacked)
         n = leaves[0].shape[0]
         cols = [l.reshape(n, -1).astype(jnp.float32) for l in leaves]
@@ -109,11 +115,14 @@ class FlatLayout:
     # -- single-model round-trip (eval / checkpoint boundaries) ---------
 
     def ravel_single(self, params):
+        """One UNSTACKED model -> (F_total,) fp32 vector (the cloud/global
+        model of eq. 10 outside the hot loop)."""
         leaves = self.treedef.flatten_up_to(params)
         return jnp.concatenate(
             [l.reshape(-1).astype(jnp.float32) for l in leaves])
 
     def unravel_single(self, vec):
+        """Inverse of ``ravel_single``: restore leaf shapes AND dtypes."""
         leaves = [
             vec[o:o + s].reshape(shp).astype(dt)
             for o, s, shp, dt in zip(self.offsets, self.sizes,
@@ -174,6 +183,15 @@ class ShardedFlatLayout:
     @classmethod
     def build(cls, base: FlatLayout, mesh, num_rows: int,
               group_ids: Optional[np.ndarray] = None) -> "ShardedFlatLayout":
+        """Derive the padded/permuted layout for ``mesh``.
+
+        ``group_ids`` (the eq. 6 edge of each UE row) is required whenever
+        the data axis is >1: edges are bin-packed whole onto row shards
+        (``_pack_groups``) so each shard's LOCAL segment means equal the
+        GLOBAL eq. 6 means — that is what keeps edge aggregation free of
+        collectives.  Feature columns are zero-padded to a model-axis
+        multiple (zero columns drop out of every weighted mean).
+        """
         from repro.launch.mesh import DATA_AXIS, MODEL_AXIS
         shape = dict(mesh.shape)
         num_data = int(shape.get(DATA_AXIS, 1))
@@ -206,9 +224,15 @@ class ShardedFlatLayout:
     @property
     def row_spec(self):
         """PartitionSpec of per-row vectors (weights, group ids)."""
-        from jax.sharding import PartitionSpec as P
-        entries = tuple(self.spec)
-        return P(entries[0] if entries else None)
+        from repro.parallel.sharding import flat_buffer_row_spec
+        return flat_buffer_row_spec(self.mesh)
+
+    @property
+    def col_spec(self):
+        """PartitionSpec of per-column vectors (the eq. 10 global / async
+        cloud model)."""
+        from repro.parallel.sharding import flat_buffer_col_spec
+        return flat_buffer_col_spec(self.mesh)
 
     def per_device_bytes(self) -> int:
         """fp32 bytes of one device's (rows, cols) slab."""
@@ -239,7 +263,8 @@ class ShardedFlatLayout:
         return jax.tree.map(lambda l: l[idx], x)
 
     def pad_weights(self, w):
-        """Permute+pad aggregation weights; padding rows get weight 0."""
+        """Permute+pad the aggregation weights D_n; padding rows get
+        weight 0, so they contribute nothing to the eq. 6/10 sums."""
         w = jnp.asarray(w, jnp.float32)
         mask = jnp.asarray(self.perm >= 0, jnp.float32)
         return w[jnp.asarray(np.maximum(self.perm, 0))] * mask

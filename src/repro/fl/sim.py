@@ -24,6 +24,19 @@ columns over 'model' — no replication), local training vmaps over each
 shard's rows, edge aggregation runs collective-free under shard_map and
 the cloud mean costs one small psum (see repro.fl.aggregate).  Batches,
 weights and group ids are permuted/padded once at construction.
+
+Async mode (``mode="async"``, BEYOND-PAPER): the cloud barrier of eq. 34
+is dropped.  ``repro.core.events`` simulates each edge's cycle
+``b * tau_m + t_mc`` on its own clock with SSP staleness gating
+(``max_staleness`` cycles of lead, 0 = exact synchronous barrier), and the
+run REPLAYS that event trace: departures re-seed the departing edges' rows
+from the cloud model and run their b-iteration cycle in place
+(``flat_edge_aggregate`` on the same flat/sharded buffer), arrivals merge
+into the cloud vector with weights decayed by ``staleness_decay **
+version_lag`` (``flat_staleness_merge`` — one psum under a mesh).  At
+``max_staleness=0`` the trajectory reproduces the synchronous path to
+float tolerance; with a bound > 0 fast edges re-enter immediately and the
+makespan drops strictly below the eq. 34 bound on heterogeneous fleets.
 """
 from __future__ import annotations
 
@@ -43,12 +56,13 @@ from repro.fl.flatten import FlatLayout, ShardedFlatLayout
 
 @dataclasses.dataclass
 class SimResult:
-    times: np.ndarray          # (R,) cumulative simulated seconds per cloud round
+    times: np.ndarray          # (R,) cumulative simulated seconds per eval
     test_acc: np.ndarray       # (R,)
     test_loss: np.ndarray      # (R,)
     train_loss: np.ndarray     # (R,)
     schedule: HFLSchedule
     final_params: object
+    timeline: object = None    # core.events.AsyncTimeline (async mode only)
 
 
 class HFLSimulator:
@@ -61,13 +75,24 @@ class HFLSimulator:
                  init_params, ue_data: List[dict], *, lr: float = 0.05,
                  solver: str = "gd", dane_mu: float = 0.1,
                  samples_per_ue: Optional[int] = None, seed: int = 0,
-                 mesh=None):
+                 mesh=None, mode: str = "sync", max_staleness: int = 0,
+                 staleness_decay: float = 0.9):
+        if mode not in ("sync", "async"):
+            raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
+        if mode == "async" and solver != "gd":
+            raise ValueError("mode='async' supports solver='gd' only (DANE's "
+                             "global gradient assumes a synchronized fleet)")
+        if max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0")
         self.schedule = schedule
         self.loss_fn = loss_fn
         self.lr = lr
         self.solver = solver
         self.dane_mu = dane_mu
         self.mesh = mesh
+        self.mode = mode
+        self.max_staleness = int(max_staleness)
+        self.staleness_decay = float(staleness_decay)
         n = schedule.num_ues
         assert len(ue_data) == n, (len(ue_data), n)
 
@@ -119,6 +144,8 @@ class HFLSimulator:
             self._hot_weights = self.weights
             self._hot_gids = self.group_ids
         self._cloud_round = self._build_cloud_round()
+        if mode == "async":
+            self._depart_cycle, self._merge = self._build_async_ops()
         # Weight-averaged train loss over ALL UEs (one vmap'd loss).
         self._train_loss = jax.jit(
             lambda gp, batches, w: jnp.sum(
@@ -185,6 +212,55 @@ class HFLSimulator:
         donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
         return jax.jit(cloud_round, donate_argnums=donate)
 
+    def _build_async_ops(self):
+        """Jitted bodies of the async event replay (mode='async').
+
+        * ``depart_cycle(flat, g, batches, mask)`` — re-seed the departing
+          edges' rows (``mask``) from the cloud vector ``g``, run their
+          full b-iteration edge cycle (Alg. 1 lines 4-9: a local GD steps
+          + eq. 6 edge aggregation, b times) and commit ONLY the masked
+          rows; mid-flight edges' rows pass through untouched.  One
+          dispatch per departure wave, compiled once.  Host-compute cost:
+          the wave trains the WHOLE buffer and discards unmasked rows (a
+          runtime mask keeps one compilation for every wave shape), so an
+          async run costs up to M_active x the sync path's training FLOPs
+          for the same delivery quota — the SIMULATED clock is unaffected,
+          and at max_staleness=0 waves contain all edges, so the barrier
+          replay costs the same as sync.
+        * ``merge(g, flat, eff_weights)`` — staleness-weighted cloud merge
+          (``flat_staleness_merge``; reduces to eq. 10 at the barrier).
+        """
+        a, b = self.schedule.a, self.schedule.b
+        M = self.schedule.num_edges
+        loss_fn, lr = self.loss_fn, self.lr
+        weights, group_ids = self._hot_weights, self._hot_gids
+        mesh = self.mesh
+        w_total = float(jnp.sum(self._hot_weights))
+        if self._slayout is not None:
+            unravel, ravel = (self._slayout.unravel_padded,
+                              self._slayout.ravel_padded)
+        else:
+            unravel, ravel = self._layout.unravel, self._layout.ravel
+        local_gd = clients.gd_local_steps(loss_fn, a, lr)
+
+        def depart_cycle(flat, g, batches, mask):
+            seeded = jnp.where(mask[:, None], g[None, :], flat)
+
+            def edge_round(_, buf):
+                p = jax.vmap(local_gd)(unravel(buf), batches)
+                return aggregate.flat_edge_aggregate(
+                    ravel(p), weights, group_ids, M, mesh=mesh)
+
+            new = jax.lax.fori_loop(0, b, edge_round, seeded)
+            return jnp.where(mask[:, None], new, flat)
+
+        def merge(g, flat, eff_weights):
+            return aggregate.flat_staleness_merge(g, flat, eff_weights,
+                                                  w_total, mesh=mesh)
+
+        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        return (jax.jit(depart_cycle, donate_argnums=donate), jax.jit(merge))
+
     def global_params(self):
         """The cloud model: weighted mean over UE replicas (eq. 10)."""
         w = self._hot_weights / jnp.sum(self._hot_weights)
@@ -195,6 +271,11 @@ class HFLSimulator:
 
     def run(self, test_batch: dict, rounds: Optional[int] = None,
             eval_every: int = 1, verbose: bool = False) -> SimResult:
+        """Execute ``rounds`` cloud rounds (sync) or the equivalent async
+        delivery quota (``rounds * M_active`` edge merges, mode='async';
+        ``eval_every`` then counts cloud-update events)."""
+        if self.mode == "async":
+            return self._run_async(test_batch, rounds, eval_every, verbose)
         sched = self.schedule
         rounds = rounds or sched.rounds
         t_round = sched.cloud_round_time                 # eq. (34)
@@ -219,3 +300,78 @@ class HFLSimulator:
                          test_loss=np.array(tlosses),
                          train_loss=np.array(trlosses),
                          schedule=sched, final_params=self.global_params())
+
+    def _run_async(self, test_batch: dict, rounds: Optional[int],
+                   eval_every: int, verbose: bool) -> SimResult:
+        """Replay the event-driven async timeline (see module docstring).
+
+        The clock comes from ``core.delay.async_completion`` (per-edge
+        cycles ``b tau_m + t_mc``, SSP-gated); the model state is advanced
+        by replaying its trace: departure waves re-seed + cycle the
+        departing edges' rows in place, every cloud update applies one
+        staleness-weighted merge and is an eval point (``eval_every``
+        counts updates; at ``max_staleness=0`` updates == sync rounds).
+        """
+        sched = self.schedule
+        if sched.problem is None:
+            raise ValueError("mode='async' needs schedule.problem to derive "
+                             "per-edge cycle times (eqs. 8/33)")
+        rounds = rounds or sched.rounds
+        stats = delay.async_completion(sched.problem, sched.assoc, sched.a,
+                                       sched.b, rounds=rounds,
+                                       max_staleness=self.max_staleness)
+        tl = stats["timeline"]
+        active = np.asarray(stats["active_edges"])
+        gids = np.asarray(self._hot_gids)
+        weights_np = np.asarray(self._hot_weights)
+        w_total = float(weights_np.sum())
+        test_batch = jax.tree.map(jnp.asarray, test_batch)
+
+        # Cloud model vector: weighted mean of the current buffer (== every
+        # row right after construction or a previous run).
+        g = jnp.tensordot(jnp.asarray(weights_np / w_total, jnp.float32),
+                          self._flat, axes=1)
+        if self.mesh is not None:
+            g = jax.device_put(
+                g, NamedSharding(self.mesh, self._slayout.col_spec))
+
+        num_updates = len(tl.updates)
+        pending = np.zeros(gids.shape[0], dtype=bool)
+        times, accs, tlosses, trlosses = [], [], [], []
+        updates_seen = 0
+        for kind, ev in tl.trace:
+            if kind == "depart":
+                pending |= gids == int(active[ev.edge])
+                continue
+            if pending.any():
+                # jnp.asarray may alias the numpy buffer (zero-copy on CPU)
+                # and dispatch is async, so hand over the buffer and start a
+                # fresh one instead of mutating it in place.
+                self._flat = self._depart_cycle(
+                    self._flat, g, self._hot_batches, jnp.asarray(pending))
+                pending = np.zeros_like(pending)
+            decay = np.zeros(sched.num_edges)
+            for e, _, s in ev.merges:
+                decay[active[e]] = self.staleness_decay ** s
+            eff = jnp.asarray(weights_np * decay[gids], jnp.float32)
+            g = self._merge(g, self._flat, eff)
+            updates_seen += 1
+            if updates_seen % eval_every == 0 or updates_seen == num_updates:
+                gp = self._layout.unravel_single(g[:self._layout.total])
+                loss, mets = self.loss_fn(gp, test_batch)
+                trl = self._train_loss(gp, self.batches, self.weights)
+                times.append(ev.t)
+                accs.append(float(mets.get("acc", jnp.nan)))
+                tlosses.append(float(loss))
+                trlosses.append(float(trl))
+                if verbose:
+                    print(f"update {updates_seen:4d}/{num_updates}  "
+                          f"t={ev.t:9.2f}s  acc={accs[-1]:.4f}  "
+                          f"loss={tlosses[-1]:.4f}")
+        # Leave the buffer consistent (all rows = cloud model) so
+        # ``global_params``/repeated runs see the merged state.
+        self._flat = jnp.zeros_like(self._flat) + g[None, :]
+        return SimResult(times=np.array(times), test_acc=np.array(accs),
+                         test_loss=np.array(tlosses),
+                         train_loss=np.array(trlosses), schedule=sched,
+                         final_params=self.global_params(), timeline=tl)

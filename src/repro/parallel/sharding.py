@@ -152,6 +152,21 @@ def flat_buffer_spec(mesh, rules=None) -> P:
     return spec_for(mesh, (UE_AXIS, FEAT_AXIS), rules)
 
 
+def flat_buffer_row_spec(mesh, rules=None) -> P:
+    """PartitionSpec of per-ROW vectors of the flat buffer (aggregation
+    weights D_n, group ids): the buffer's leading-axis entry alone."""
+    entries = tuple(flat_buffer_spec(mesh, rules))
+    return P(entries[0] if entries else None)
+
+
+def flat_buffer_col_spec(mesh, rules=None) -> P:
+    """PartitionSpec of per-COLUMN vectors of the flat buffer (the global
+    model vector of eq. 10 / the async cloud state): the buffer's feature
+    -axis entry alone."""
+    entries = tuple(flat_buffer_spec(mesh, rules))
+    return P(entries[1]) if len(entries) > 1 else P()
+
+
 def constrain(x, mesh, logical: tuple, rules=None):
     """with_sharding_constraint via logical axes (no-op off-mesh dims)."""
     rules = rules or DEFAULT_RULES

@@ -1,0 +1,137 @@
+"""Event-driven async timeline: barrier parity, staleness bounds,
+starvation freedom, deterministic tie ordering."""
+import numpy as np
+import pytest
+
+from repro.core import assoc as assoc_lib
+from repro.core import delay, events
+from repro.core.problem import HFLProblem
+
+
+def test_barrier_mode_reproduces_sync_bound():
+    """max_staleness=0 must equal the eq. 34 schedule event-for-event."""
+    cycles = [1.0, 2.5, 4.0]
+    rounds = 5
+    tl = events.simulate_async(cycles, rounds=rounds, max_staleness=0)
+    assert tl.makespan == pytest.approx(rounds * max(cycles), abs=0)
+    assert len(tl.updates) == rounds
+    for k, u in enumerate(tl.updates):
+        assert u.t == pytest.approx((k + 1) * max(cycles))
+        assert len(u.merges) == len(cycles)
+        assert all(s == 0 for _, _, s in u.merges)
+    # every edge delivers exactly `rounds` models
+    np.testing.assert_array_equal(tl.merges_per_edge(),
+                                  np.full(len(cycles), rounds))
+
+
+def test_async_beats_sync_bound_on_heterogeneous_fleet():
+    cycles = [1.0, 2.0, 6.0]
+    rounds = 4
+    sync = rounds * max(cycles)
+    prev = np.inf
+    for s_max in (1, 2, 4):
+        tl = events.simulate_async(cycles, rounds=rounds, max_staleness=s_max)
+        assert tl.makespan < sync
+        assert tl.makespan <= prev + 1e-12   # larger bound, never slower
+        prev = tl.makespan
+        # equal communication work as `rounds` sync rounds
+        assert sum(len(u.merges) for u in tl.updates) == rounds * len(cycles)
+
+
+def test_homogeneous_fleet_gains_nothing():
+    """With identical cycle times there is no straggler slack to reclaim."""
+    tl = events.simulate_async([2.0, 2.0, 2.0], rounds=3, max_staleness=4)
+    assert tl.makespan == pytest.approx(3 * 2.0)
+
+
+def test_single_slow_edge_never_starves_the_cloud():
+    """While the straggler grinds its first cycle, fast edges keep feeding
+    the cloud (sync would deliver NOTHING until t=10)."""
+    cycles = [1.0, 1.0, 10.0]
+    tl = events.simulate_async(cycles, rounds=4, max_staleness=3)
+    early = [u for u in tl.updates if u.t < 10.0]
+    assert len(early) >= 2 * 3          # both fast edges, gated at 3 ahead
+    assert all(e in (0, 1) for u in early for e, _, _ in u.merges)
+    # and the straleness gate still holds them eventually: nobody runs
+    # more than max_staleness cycles ahead of the straggler.
+    for u in tl.updates:
+        for edge, cycle, _ in u.merges:
+            if u.t <= 10.0:
+                assert cycle <= 1 + 3 + 1   # straggler on 1st + bound
+
+
+def test_staleness_gate_bounds_version_lag():
+    cycles = [1.0, 3.0, 7.0]
+    for s_max in (1, 2, 3):
+        tl = events.simulate_async(cycles, rounds=6, max_staleness=s_max)
+        assert tl.max_staleness_seen() <= len(cycles) * (s_max + 1)
+
+
+def test_deterministic_event_order_under_ties():
+    """Identical cycle times -> tied timestamps; the trace must be
+    bit-identical across runs with ties resolved by edge index."""
+    a = events.simulate_async([2.0, 2.0, 2.0], rounds=3, max_staleness=1)
+    b = events.simulate_async([2.0, 2.0, 2.0], rounds=3, max_staleness=1)
+    assert a.trace == b.trace
+    assert a.makespan == b.makespan
+    # ties resolve by edge index: within any group of same-time updates,
+    # edge ids appear in increasing order
+    by_t: dict = {}
+    for u in a.updates:
+        by_t.setdefault(u.t, []).extend(e for e, _, _ in u.merges)
+    for t, ids in by_t.items():
+        assert ids == sorted(ids), (t, ids)
+
+
+def test_engine_input_validation():
+    with pytest.raises(ValueError):
+        events.simulate_async([], rounds=1, max_staleness=0)
+    with pytest.raises(ValueError):
+        events.simulate_async([1.0, 0.0], rounds=1, max_staleness=0)
+    with pytest.raises(ValueError):
+        events.simulate_async([1.0], rounds=0, max_staleness=0)
+    with pytest.raises(ValueError):
+        events.simulate_async([1.0], rounds=1, max_staleness=-1)
+
+
+def test_async_completion_problem_level():
+    """delay.async_completion glues the wireless delay model (eqs. 8/33)
+    onto the event engine and reports the eq. 34 bound faithfully."""
+    prob = HFLProblem(num_edges=3, num_ues=12, seed=0)
+    A = assoc_lib.proposed(prob)
+    a, b, rounds = 5, 4, 6
+    r0 = delay.async_completion(prob, A, a, b, rounds=rounds, max_staleness=0)
+    assert r0["makespan"] == pytest.approx(r0["sync_makespan"], rel=1e-12)
+    assert r0["sync_makespan"] == pytest.approx(
+        rounds * delay.cloud_round_time(prob, A, a, b))
+    r2 = delay.async_completion(prob, A, a, b, rounds=rounds, max_staleness=2)
+    assert r2["makespan"] < r2["sync_makespan"]
+    assert r2["speedup"] > 1.0
+    # busy fractions: zero for inactive edges, within (0, 1] for active
+    busy = r2["edge_busy_frac"]
+    active = r2["active_edges"]
+    assert np.all(busy[active] > 0) and np.all(busy <= 1.0 + 1e-9)
+    # cycle times: the per-edge term of eq. 34
+    cyc = delay.edge_cycle_time(prob, A, a, b)
+    tau = delay.edge_round_time(prob, A, a)
+    np.testing.assert_allclose(
+        cyc[active], b * tau[active] + prob.t_edge_cloud()[active])
+
+
+def test_refined_async_makespan_objective():
+    """assoc.refined(objective='async_makespan') never regresses Alg. 3
+    under the async scoring and returns a valid association."""
+    prob = HFLProblem(num_edges=3, num_ues=9, seed=1,
+                      cycles_per_sample_lo=1e3, cycles_per_sample_hi=3e5)
+    a, b, rounds, s_max = 8, 3, 6, 2
+    base = delay.async_completion(
+        prob, assoc_lib.proposed(prob), a, b, rounds=rounds,
+        max_staleness=s_max)["makespan"]
+    A = assoc_lib.refined(prob, a=a, objective="async_makespan", b=b,
+                          rounds=rounds, max_staleness=s_max, max_moves=30)
+    tuned = delay.async_completion(prob, A, a, b, rounds=rounds,
+                                   max_staleness=s_max)["makespan"]
+    assert tuned <= base + 1e-9
+    assert (A.sum(1) == 1).all()
+    with pytest.raises(ValueError):
+        assoc_lib.refined(prob, objective="nonsense")

@@ -1,0 +1,131 @@
+"""Async simulator mode: sync-trajectory parity at max_staleness=0,
+staleness-bounded progress, determinism, and argument validation."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import schedule
+from repro.core.problem import HFLProblem
+from repro.data import partition, synthetic
+from repro.fl.sim import HFLSimulator
+from repro.models import lenet
+
+
+def _loss_fn(p, b):
+    return lenet.logreg_loss(p, b, l2=1e-3)
+
+
+@pytest.fixture(scope="module")
+def async_setup():
+    prob = HFLProblem(num_edges=2, num_ues=8, epsilon=0.25, seed=0,
+                      samples_lo=50, samples_hi=120)
+    sch = schedule.plan(prob)
+    train = synthetic.logreg_data(seed=0, n=800, dim=12, num_classes=4)
+    test = synthetic.logreg_data(seed=1, n=200, dim=12, num_classes=4)
+    rng = np.random.default_rng(0)
+    parts = partition.size_partition(rng, 800, prob.samples.astype(int))
+    ue_data = [{k: train[k][ix] for k in train} for ix in parts]
+    init = lenet.logreg_init(jax.random.PRNGKey(0), 12, 4)
+    return sch, init, ue_data, test
+
+
+def test_async_staleness_zero_matches_sync_trajectory(async_setup):
+    """The acceptance bar: mode='async', max_staleness=0 reproduces the
+    synchronous trajectory (clock AND model) to <= 1e-5."""
+    sch, init, ue_data, test = async_setup
+    rounds = 5
+    res_s = HFLSimulator(sch, _loss_fn, init, ue_data,
+                         lr=0.02).run(test, rounds=rounds)
+    res_a = HFLSimulator(sch, _loss_fn, init, ue_data, lr=0.02,
+                         mode="async", max_staleness=0).run(test,
+                                                            rounds=rounds)
+    np.testing.assert_allclose(res_a.times, res_s.times, rtol=1e-12)
+    np.testing.assert_allclose(res_a.test_loss, res_s.test_loss, atol=1e-5)
+    np.testing.assert_allclose(res_a.train_loss, res_s.train_loss, atol=1e-5)
+    np.testing.assert_allclose(res_a.test_acc, res_s.test_acc, atol=1e-5)
+    for la, ls in zip(jax.tree.leaves(res_a.final_params),
+                      jax.tree.leaves(res_s.final_params)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(ls), atol=1e-5)
+    assert res_a.timeline is not None and res_s.timeline is None
+
+
+def test_async_staleness_beats_sync_clock_and_converges(async_setup):
+    sch, init, ue_data, test = async_setup
+    rounds = 5
+    sim = HFLSimulator(sch, _loss_fn, init, ue_data, lr=0.02,
+                       mode="async", max_staleness=2)
+    res = sim.run(test, rounds=rounds)
+    # equal communication work, strictly earlier finish than eq. 34
+    assert res.times[-1] < rounds * sch.cloud_round_time
+    assert np.all(np.diff(res.times) > 0)
+    assert np.all(np.isfinite(res.test_loss))
+    assert res.test_acc[-1] > 0.9
+    # one eval per cloud update; quota = rounds * active edges
+    m_active = int((sch.assoc.sum(0) > 0).sum())
+    assert len(res.times) == rounds * m_active
+
+
+def test_async_run_is_deterministic(async_setup):
+    sch, init, ue_data, test = async_setup
+    r1 = HFLSimulator(sch, _loss_fn, init, ue_data, lr=0.02, mode="async",
+                      max_staleness=2).run(test, rounds=3)
+    r2 = HFLSimulator(sch, _loss_fn, init, ue_data, lr=0.02, mode="async",
+                      max_staleness=2).run(test, rounds=3)
+    np.testing.assert_array_equal(r1.times, r2.times)
+    np.testing.assert_array_equal(r1.test_loss, r2.test_loss)
+
+
+def test_async_slow_edge_does_not_block_progress(async_setup):
+    """Stretch one edge's backhaul to a crawl: with a staleness allowance
+    the cloud still receives early merges long before the straggler's
+    first full cycle lands."""
+    sch, init, ue_data, test = async_setup
+    prob = sch.problem
+    slow = int(sch.assoc.sum(0).argmax())
+    orig = prob.backhaul
+    backhaul = orig.copy()
+    backhaul[slow] = backhaul[slow] / 1e3       # ~1000x slower upload
+    prob.backhaul = backhaul
+    try:
+        sim = HFLSimulator(sch, _loss_fn, init, ue_data, lr=0.02,
+                           mode="async", max_staleness=3)
+        res = sim.run(test, rounds=3)
+        from repro.core import delay
+        cyc = delay.edge_cycle_time(prob, sch.assoc, sch.a, sch.b)
+        early = res.times[res.times < cyc[slow]]
+        assert early.size > 0, "fast edges must reach the cloud first"
+        assert np.all(np.isfinite(res.test_loss))
+    finally:
+        prob.backhaul = orig
+
+
+def test_async_eval_every_thins_eval_points(async_setup):
+    sch, init, ue_data, test = async_setup
+    sim = HFLSimulator(sch, _loss_fn, init, ue_data, lr=0.02,
+                       mode="async", max_staleness=1)
+    res = sim.run(test, rounds=3, eval_every=3)
+    m_active = int((sch.assoc.sum(0) > 0).sum())
+    total = 3 * m_active
+    expect = total // 3 + (1 if total % 3 else 0)
+    assert len(res.times) == expect
+
+
+def test_async_argument_validation(async_setup):
+    sch, init, ue_data, _ = async_setup
+    with pytest.raises(ValueError):
+        HFLSimulator(sch, _loss_fn, init, ue_data, mode="bogus")
+    with pytest.raises(ValueError):
+        HFLSimulator(sch, _loss_fn, init, ue_data, mode="async",
+                     solver="dane")
+    with pytest.raises(ValueError):
+        HFLSimulator(sch, _loss_fn, init, ue_data, mode="async",
+                     max_staleness=-1)
+
+
+def test_async_requires_problem_for_cycle_times(async_setup):
+    import dataclasses
+    sch, init, ue_data, test = async_setup
+    bare = dataclasses.replace(sch, problem=None)
+    sim = HFLSimulator(bare, _loss_fn, init, ue_data, mode="async")
+    with pytest.raises(ValueError):
+        sim.run(test, rounds=1)

@@ -127,6 +127,56 @@ SIM_SCRIPT = textwrap.dedent("""
 """)
 
 
+ASYNC_SIM_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import sys; sys.path.insert(0, sys.argv[1])
+    import numpy as np, jax
+    from repro.core import schedule
+    from repro.core.problem import HFLProblem
+    from repro.data import partition, synthetic
+    from repro.fl.sim import HFLSimulator
+    from repro.launch.mesh import make_agg_mesh
+    from repro.models import lenet
+
+    prob = HFLProblem(num_edges=2, num_ues=8, epsilon=0.25, seed=0,
+                      samples_lo=50, samples_hi=120)
+    sch = schedule.plan(prob)
+    train = synthetic.logreg_data(seed=0, n=800, dim=12, num_classes=4)
+    test = synthetic.logreg_data(seed=1, n=200, dim=12, num_classes=4)
+    rng = np.random.default_rng(0)
+    parts = partition.size_partition(rng, 800, prob.samples.astype(int))
+    ue_data = [{k: train[k][ix] for k in train} for ix in parts]
+    init = lenet.logreg_init(jax.random.PRNGKey(0), 12, 4)
+    loss_fn = lambda p, b: lenet.logreg_loss(p, b, l2=1e-3)
+
+    # the async event replay (staleness merges included) must be mesh-
+    # invariant: sharded run == single-device run, for a barrier bound
+    # and a permissive one.
+    for s_max in (0, 2):
+        ref = HFLSimulator(sch, loss_fn, init, ue_data, lr=0.02,
+                           mode="async", max_staleness=s_max)
+        r0 = ref.run(test, rounds=2)
+        for (d, m) in [(2, 4), (1, 4)]:
+            sim = HFLSimulator(sch, loss_fn, init, ue_data, lr=0.02,
+                               mode="async", max_staleness=s_max,
+                               mesh=make_agg_mesh(m, d))
+            r1 = sim.run(test, rounds=2)
+            np.testing.assert_allclose(r1.times, r0.times, rtol=1e-12)
+            np.testing.assert_allclose(r1.test_loss, r0.test_loss,
+                                       atol=1e-5)
+            np.testing.assert_allclose(r1.train_loss, r0.train_loss,
+                                       atol=1e-5)
+            for a, b in zip(jax.tree.leaves(r1.final_params),
+                            jax.tree.leaves(r0.final_params)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-5)
+            print(f"OK async s={s_max} data={d} model={m}")
+    print("OK all")
+""")
+
+
 def _run(script):
     r = subprocess.run([sys.executable, "-c", script, SRC],
                        capture_output=True, text=True, timeout=600)
@@ -142,6 +192,11 @@ def test_sharded_aggregate_matches_flat_and_oracle():
 @pytest.mark.slow
 def test_simulator_mesh_trajectory_parity():
     _run(SIM_SCRIPT)
+
+
+@pytest.mark.slow
+def test_async_simulator_mesh_trajectory_parity():
+    _run(ASYNC_SIM_SCRIPT)
 
 
 def test_sharded_layout_padding_round_trip_single_device():

@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Execute the python code fences in README.md and docs/*.md.
+
+Docs rot when their snippets drift from the API; this runner keeps them
+honest.  Every fenced block whose info string starts with ``python`` is
+extracted and executed in a fresh interpreter with ``PYTHONPATH=src``
+(the tier-1 environment) from the repository root.  Blocks that are
+intentionally illustrative opt out with ``python no-run`` — GitHub still
+highlights them (only the first word of the info string matters).
+
+Usage:  python tools/check_docs.py [file.md ...]
+        (no args: README.md + docs/*.md)
+
+Exit status is non-zero if any block fails; each failure prints the
+source file, the fence's line number and the captured stderr.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FENCE = re.compile(r"^```(\S*)[ \t]*(.*)$")
+TIMEOUT_S = 600
+
+
+def extract_blocks(path: str):
+    """Yield (start_line, info, code) for every fenced block in ``path``."""
+    lines = open(path, encoding="utf-8").read().splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if not m or not m.group(1):
+            i += 1
+            continue
+        lang, extra = m.group(1), m.group(2)
+        start = i + 1
+        body = []
+        i += 1
+        while i < len(lines) and not lines[i].startswith("```"):
+            body.append(lines[i])
+            i += 1
+        i += 1                                   # closing fence
+        yield start, f"{lang} {extra}".strip(), "\n".join(body)
+
+
+def runnable(info: str) -> bool:
+    return info.split()[0] == "python" and "no-run" not in info
+
+
+def main(argv) -> int:
+    paths = argv or (["README.md"] + sorted(
+        os.path.relpath(p, REPO)
+        for p in glob.glob(os.path.join(REPO, "docs", "*.md"))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    ran = failed = 0
+    for path in paths:
+        full = os.path.join(REPO, path)
+        if not os.path.exists(full):
+            print(f"MISSING {path}")
+            failed += 1
+            continue
+        for line, info, code in extract_blocks(full):
+            if not runnable(info):
+                continue
+            ran += 1
+            print(f"RUN  {path}:{line} ({len(code.splitlines())} lines) ...",
+                  flush=True)
+            try:
+                r = subprocess.run([sys.executable, "-c", code], cwd=REPO,
+                                   env=env, capture_output=True, text=True,
+                                   timeout=TIMEOUT_S)
+            except subprocess.TimeoutExpired:
+                failed += 1
+                print(f"FAIL {path}:{line} (timeout after {TIMEOUT_S}s)")
+                continue
+            if r.returncode != 0:
+                failed += 1
+                print(f"FAIL {path}:{line}\n{r.stderr[-3000:]}")
+            else:
+                print(f"OK   {path}:{line}")
+    print(f"\n{ran} blocks run, {failed} failed")
+    if ran == 0:
+        print("no runnable blocks found — is the quickstart missing?")
+        return 1
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
