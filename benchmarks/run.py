@@ -17,7 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from benchmarks import (bench_ablation, bench_association, bench_async,
                         bench_convergence, bench_iterations, bench_kernels,
                         bench_optimizer, bench_roofline, bench_serving,
-                        bench_shard)
+                        bench_shard, bench_stochastic)
 
 SUITES = {
     "iterations": bench_iterations.run,     # Figs. 2-3
@@ -27,6 +27,7 @@ SUITES = {
     "kernels": bench_kernels.run,
     "shard": bench_shard.run,               # mesh-sharded aggregation
     "async": bench_async.run,               # sync eq. 34 vs async timeline
+    "stochastic": bench_stochastic.run,     # makespan dists under draws
     "roofline": bench_roofline.run,         # EXPERIMENTS.md §Roofline
     "ablation": bench_ablation.run,         # beyond-paper ablations
     "serving": bench_serving.run,           # decode throughput (smoke)

@@ -5,8 +5,10 @@ Fig. 3 — optimal (a, b) vs number of UEs per edge.
 Fig. 5 — max latency vs number of edge servers, three association schemes.
 Figs. 4/6 — time-to-accuracy under optimal (a*, b*) vs suboptimal pairs.
 
-Run:  PYTHONPATH=src python examples/paper_experiments.py
-(Full-scale versions live in benchmarks/ — this is the readable demo.)
+Run:  PYTHONPATH=src python examples/paper_experiments.py [--smoke]
+(Full-scale versions live in benchmarks/ — this is the readable demo.
+``--smoke`` shrinks every figure to a seconds-scale subset; CI runs it
+as a tier-1 step to keep this entry point executable.)
 """
 import sys
 
@@ -21,16 +23,18 @@ from repro.data import partition, synthetic
 from repro.fl.sim import HFLSimulator
 from repro.models import lenet
 
+SMOKE = "--smoke" in sys.argv[1:]
+
 
 def fig2():
     print("== Fig. 2: iterations vs global accuracy eps ==")
     # WAN-speed backhaul (1-5 Mbit/s) puts the system in the regime where
     # edge aggregation pays off (b > 1), as in the paper's figures.
-    prob = HFLProblem(num_edges=5, num_ues=100, seed=0,
+    prob = HFLProblem(num_edges=5, num_ues=30 if SMOKE else 100, seed=0,
                       backhaul_rate_lo=1e6, backhaul_rate_hi=5e6)
     A = assoc.proposed(prob)
     print(f"{'eps':>6} {'a*':>5} {'b*':>5} {'a*b':>6} {'R':>7} {'total[s]':>9}")
-    for eps in (0.5, 0.4, 0.3, 0.2, 0.1, 0.05):
+    for eps in (0.5, 0.1) if SMOKE else (0.5, 0.4, 0.3, 0.2, 0.1, 0.05):
         prob.epsilon = eps
         s = iteropt.solve_direct(prob, A)
         print(f"{eps:6.2f} {s.a_int:5d} {s.b_int:5d} {s.a_int*s.b_int:6d} "
@@ -40,7 +44,7 @@ def fig2():
 def fig3():
     print("\n== Fig. 3: iterations vs number of UEs per edge ==")
     print(f"{'UEs':>5} {'a*':>5} {'b*':>5} {'total[s]':>9}")
-    for ues in (10, 20, 40, 60, 80, 100):
+    for ues in (10, 20) if SMOKE else (10, 20, 40, 60, 80, 100):
         prob = HFLProblem(num_edges=5, num_ues=5 * ues, epsilon=0.25, seed=1,
                           backhaul_rate_lo=1e6, backhaul_rate_hi=5e6)
         A = assoc.proposed(prob)
@@ -51,13 +55,13 @@ def fig3():
 def fig5():
     print("\n== Fig. 5: association latency vs number of edges ==")
     print(f"{'edges':>6} {'proposed':>9} {'refined':>9} {'greedy':>9} {'random':>9}")
-    for m in (2, 4, 6, 8, 10):
+    for m in (2, 4) if SMOKE else (2, 4, 6, 8, 10):
         vals = {}
         for name in ("proposed", "refined", "greedy", "random"):
             lat = []
-            for seed in range(5):
-                prob = HFLProblem(num_edges=m, num_ues=100, epsilon=0.25,
-                                  seed=seed)
+            for seed in range(2 if SMOKE else 5):
+                prob = HFLProblem(num_edges=m, num_ues=40 if SMOKE else 100,
+                                  epsilon=0.25, seed=seed)
                 A = assoc.STRATEGIES[name](prob, seed=seed)
                 lat.append(delay.association_latency(prob, A, a=10))
             vals[name] = np.mean(lat)
@@ -69,7 +73,9 @@ def fig46():
     print("\n== Figs. 4/6: time-to-accuracy, optimal vs suboptimal (a,b) ==")
     prob = HFLProblem(num_edges=2, num_ues=8, epsilon=0.25, seed=0)
     sch_opt = schedule.plan(prob)
-    train, test = synthetic.synthetic_mnist(seed=0, n_train=800, n_test=300)
+    train, test = synthetic.synthetic_mnist(seed=0,
+                                            n_train=400 if SMOKE else 800,
+                                            n_test=150 if SMOKE else 300)
     rng = np.random.default_rng(0)
     parts = partition.dirichlet_partition(rng, train["labels"], 8, alpha=1.0)
     ue_data = [{k: train[k][ix] for k in train} for ix in parts]
@@ -87,8 +93,8 @@ def fig46():
                 a, b, epsilon=prob.epsilon, zeta=prob.zeta,
                 gamma=prob.gamma, big_c=prob.big_c))))))
         sim = HFLSimulator(sch, lenet.lenet_loss, init, ue_data, lr=0.05,
-                           samples_per_ue=32)
-        res = sim.run(test, rounds=min(sch.rounds, 2))
+                           samples_per_ue=16 if SMOKE else 32)
+        res = sim.run(test, rounds=1 if SMOKE else min(sch.rounds, 2))
         tt = " ".join(f"({t:6.1f}s,{acc:.2f})" for t, acc in
                       list(zip(res.times, res.test_acc))[:4])
         print(f"  a={a:3d} b={b:2d} [{tag:8s}]  {tt}", flush=True)

@@ -8,10 +8,16 @@
 * ``schedule`` — HFLSchedule + TPU roofline bridge (hardware adaptation).
 * ``events``   — BEYOND-PAPER event-driven async edge-round timeline with
   SSP staleness gating (degenerates to the eq. 34 barrier at bound 0).
+* ``stochastic`` — BEYOND-PAPER per-cycle delay draws: ``DelayModel``
+  samplers (lognormal / shifted-exp compute, Rayleigh+shadowing fading
+  through the eq. 4 rate) and the named ``Scenario`` registry.
 """
 from repro.core.events import AsyncTimeline, simulate_async
 from repro.core.problem import HFLProblem
 from repro.core.schedule import HFLSchedule, plan, plan_from_roofline
+from repro.core.stochastic import (SCENARIOS, DelayModel,
+                                   DeterministicDelays, Scenario, scenario)
 
-__all__ = ["AsyncTimeline", "HFLProblem", "HFLSchedule", "plan",
-           "plan_from_roofline", "simulate_async"]
+__all__ = ["AsyncTimeline", "DelayModel", "DeterministicDelays",
+           "HFLProblem", "HFLSchedule", "SCENARIOS", "Scenario", "plan",
+           "plan_from_roofline", "scenario", "simulate_async"]

@@ -192,7 +192,8 @@ def _latency_terms(problem: HFLProblem, a: float):
 def refined(problem: HFLProblem, a: float = 10.0,
             max_moves: int = 500, incremental: bool = True,
             objective: str = "latency", b: float = 3.0, rounds: int = 8,
-            max_staleness: int = 2) -> np.ndarray:
+            max_staleness: int = 2, delay_model=None, q: float = 0.95,
+            num_trials: int = 24, delay_key=0) -> np.ndarray:
     """BEYOND-PAPER: Alg. 3 + bottleneck local search.
 
     Alg. 3 maximizes selected SNR, which is a proxy for the true objective
@@ -213,6 +214,15 @@ def refined(problem: HFLProblem, a: float = 10.0,
       BOUNDED regime, where balancing whole edge cycles matters more than
       the single worst UE.  Scored by full timeline simulation, so only
       the full-recompute search path applies (small N, M instances).
+    * ``"quantile_makespan"`` — the ``q``-quantile (default p95) of the
+      STOCHASTIC async makespan (``delay.quantile_makespan`` over
+      ``num_trials`` keyed trials of ``delay_model``, default the
+      ``urban_stragglers`` scenario): the ROBUST association.  A fixed
+      ``delay_key`` gives every candidate the same draws (common random
+      numbers), so the bottleneck descent is on a deterministic surface
+      — the result the paper's Algorithm 2/3 (deterministic bound) can't
+      express, since the p95 argmin differs from the mean argmin under
+      heavy-tailed stragglers.
 
     ``incremental=True`` (default, latency objective only) evaluates each
     trial move by DELTA: a move only changes the two touched edges'
@@ -226,6 +236,18 @@ def refined(problem: HFLProblem, a: float = 10.0,
             return delay.async_completion(
                 problem, A, a, b, rounds=rounds,
                 max_staleness=max_staleness)["makespan"]
+        return _refined_full_recompute(problem, a, max_moves, cap,
+                                       score=score)
+    if objective == "quantile_makespan":
+        if delay_model is None:
+            from repro.core import stochastic
+            delay_model = stochastic.scenario("urban_stragglers").model
+
+        def score(A):
+            return delay.quantile_makespan(
+                problem, A, a, b, rounds=rounds,
+                max_staleness=max_staleness, model=delay_model,
+                key=delay_key, num_trials=num_trials, q=q)
         return _refined_full_recompute(problem, a, max_moves, cap,
                                        score=score)
     if objective != "latency":

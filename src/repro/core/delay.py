@@ -17,6 +17,17 @@ outer max (the cloud barrier) and let each edge repeat its own cycle
 staleness lag.  ``async_completion`` reports the resulting makespan for the
 same communication work as ``rounds`` synchronous cloud rounds, which is
 <= the eq. 34 bound ``rounds * T`` (equal at ``max_staleness=0``).
+
+Stochastic extension (``repro.core.stochastic``): every function below
+that takes ``delay_model=``/``model=`` replaces the paper's constants with
+per-cycle draws — ``async_completion`` feeds a pre-sampled ``(C, M)``
+matrix to the event engine, the ``expected_``/``quantile_`` variants of
+``edge_round_time`` summarize the tau_m distribution, and
+``makespan_distribution``/``quantile_makespan`` Monte-Carlo the full
+sync-vs-async makespan comparison.  Under draws the "sync makespan" is
+``sum_r max_m c_m^(r)`` (each barrier round waits for that round's
+slowest draw) — the straggler inflation ``E[max] >= max E`` the
+deterministic model cannot show.
 """
 from __future__ import annotations
 
@@ -130,17 +141,29 @@ def edge_cycle_time(problem: HFLProblem, assoc: np.ndarray, a, b) -> np.ndarray:
 
 
 def async_completion(problem: HFLProblem, assoc: np.ndarray, a, b, *,
-                     rounds: int, max_staleness: int) -> dict:
+                     rounds: int, max_staleness: int,
+                     delay_model=None, key=0) -> dict:
     """Event-driven async completion-time statistics vs. the eq. 34 bound.
 
     Simulates ``rounds * M_active`` edge->cloud deliveries (the same
     communication work as ``rounds`` synchronous cloud rounds) over the
     per-edge cycle times with SSP staleness gating (``repro.core.events``).
 
+    With ``delay_model=`` (a ``repro.core.stochastic.DelayModel``), every
+    edge cycle consumes a fresh draw: one vectorized ``cycle_times`` call
+    pre-samples the whole ``(rounds + max_staleness, M)`` matrix under
+    ``key`` and the engine indexes it per departure.  The sync reference
+    then becomes ``sum_r max_m c_m^(r)`` over the SAME draws (each barrier
+    round waits for that round's slowest edge — common random numbers, so
+    speedup isolates the schedule, not the noise).
+    ``delay_model=DeterministicDelays()`` reproduces the constant-delay
+    trace event-for-event.
+
     Returns a dict with the timeline and the headline quantities:
 
     * ``makespan``        — async wall clock for the delivery quota;
-    * ``sync_makespan``   — the synchronous bound ``rounds * T`` (eq. 34);
+    * ``sync_makespan``   — the synchronous bound: ``rounds * T`` (eq. 34),
+      or the per-round-max sum under draws;
     * ``speedup``         — sync_makespan / makespan (1.0 at max_staleness=0);
     * ``cloud_idle_frac`` — longest no-arrival window / makespan;
     * ``edge_busy_frac``  — (M,) per-edge compute fraction (0 for inactive);
@@ -148,10 +171,16 @@ def async_completion(problem: HFLProblem, assoc: np.ndarray, a, b, *,
       global edge indices.
     """
     active = np.flatnonzero(np.asarray(assoc).sum(0) > 0)
-    cycles = edge_cycle_time(problem, assoc, a, b)
-    tl = events.simulate_async(cycles[active], rounds=int(rounds),
+    if delay_model is None:
+        cycles = edge_cycle_time(problem, assoc, a, b)[active]
+        sync = float(rounds) * cloud_round_time(problem, assoc, a, b)
+    else:
+        draws = delay_model.cycle_times(key, problem, assoc, a, b,
+                                        int(rounds) + int(max_staleness))
+        cycles = np.asarray(draws)[:, active]
+        sync = float(cycles[:int(rounds)].max(axis=1).sum())
+    tl = events.simulate_async(cycles, rounds=int(rounds),
                                max_staleness=int(max_staleness))
-    sync = float(rounds) * cloud_round_time(problem, assoc, a, b)
     busy = np.zeros(problem.num_edges)
     busy[active] = tl.edge_busy_frac()
     arrivals = [(u.t, int(active[e]), int(c), int(s))
@@ -166,3 +195,98 @@ def async_completion(problem: HFLProblem, assoc: np.ndarray, a, b, *,
         "edge_busy_frac": busy,
         "arrivals": arrivals,
     }
+
+
+# ---------------------------------------------------------------------------
+# BEYOND-PAPER: stochastic-delay summaries (repro.core.stochastic models).
+# ---------------------------------------------------------------------------
+
+
+def edge_round_time_stats(problem: HFLProblem, assoc: np.ndarray, a, *,
+                          model, key=0, num_samples: int = 256,
+                          qs=(0.5, 0.95)) -> dict:
+    """Monte-Carlo summary of tau_m (eq. 33) under a stochastic model.
+
+    One vectorized draw of ``num_samples`` edge rounds; returns
+    ``{"draws": (S, M), "mean": (M,), "quantiles": {q: (M,)}}``.  With
+    ``DeterministicDelays`` every row (and every quantile) equals
+    ``edge_round_time`` exactly; the mean only up to float summation.
+    """
+    draws = np.asarray(model.edge_round_times(key, problem, assoc, a,
+                                              int(num_samples)))
+    return {
+        "draws": draws,
+        "mean": draws.mean(axis=0),
+        "quantiles": {float(q): np.quantile(draws, q, axis=0) for q in qs},
+    }
+
+
+def expected_edge_round_time(problem: HFLProblem, assoc: np.ndarray, a, *,
+                             model, key=0,
+                             num_samples: int = 256) -> np.ndarray:
+    """E[tau_m] under ``model`` — the stochastic analogue of
+    ``edge_round_time`` (exactly it, for ``DeterministicDelays``)."""
+    return edge_round_time_stats(problem, assoc, a, model=model, key=key,
+                                 num_samples=num_samples)["mean"]
+
+
+def quantile_edge_round_time(problem: HFLProblem, assoc: np.ndarray, a,
+                             q: float = 0.95, *, model, key=0,
+                             num_samples: int = 256) -> np.ndarray:
+    """Per-edge tau_m q-quantile — the robust (straggler-aware) round
+    time the deterministic eq. 33 understates."""
+    return edge_round_time_stats(problem, assoc, a, model=model, key=key,
+                                 num_samples=num_samples,
+                                 qs=(q,))["quantiles"][float(q)]
+
+
+def makespan_distribution(problem: HFLProblem, assoc: np.ndarray, a, b, *,
+                          rounds: int, max_staleness: int, model, key=0,
+                          num_trials: int = 64) -> dict:
+    """Monte-Carlo sync-vs-async makespan distributions under ``model``.
+
+    ONE vectorized draw covers all ``num_trials`` independent timelines
+    (``num_trials * (rounds + max_staleness)`` cycle rows, reshaped per
+    trial); each trial then replays the event engine on its slice and
+    scores the synchronous barrier ``sum_r max_m c_m^(r)`` on the same
+    rows — common random numbers, so the async-vs-sync gap isolates the
+    schedule.  Returns per-trial makespans plus p50/p95 summaries.
+    """
+    rounds, max_staleness = int(rounds), int(max_staleness)
+    n_cycles = rounds + max_staleness
+    active = np.flatnonzero(np.asarray(assoc).sum(0) > 0)
+    draws = np.asarray(model.cycle_times(key, problem, assoc, a, b,
+                                         int(num_trials) * n_cycles))
+    draws = draws.reshape(int(num_trials), n_cycles, -1)[:, :, active]
+    async_ms = np.empty(int(num_trials))
+    sync_ms = np.empty(int(num_trials))
+    for i in range(int(num_trials)):
+        tl = events.simulate_async(draws[i], rounds=rounds,
+                                   max_staleness=max_staleness)
+        async_ms[i] = tl.makespan
+        sync_ms[i] = float(draws[i, :rounds].max(axis=1).sum())
+    return {
+        "async_makespans": async_ms,
+        "sync_makespans": sync_ms,
+        "async_p50": float(np.quantile(async_ms, 0.5)),
+        "async_p95": float(np.quantile(async_ms, 0.95)),
+        "sync_p50": float(np.quantile(sync_ms, 0.5)),
+        "sync_p95": float(np.quantile(sync_ms, 0.95)),
+        "speedup_p50": float(np.quantile(sync_ms, 0.5) /
+                             np.quantile(async_ms, 0.5)),
+        "speedup_p95": float(np.quantile(sync_ms, 0.95) /
+                             np.quantile(async_ms, 0.95)),
+    }
+
+
+def quantile_makespan(problem: HFLProblem, assoc: np.ndarray, a, b, *,
+                      rounds: int, max_staleness: int, model, key=0,
+                      num_trials: int = 32, q: float = 0.95) -> float:
+    """q-quantile of the async makespan under ``model`` — the robust
+    objective ``assoc.refined(objective="quantile_makespan")`` descends.
+    Keyed sampling makes repeated calls comparable (common random
+    numbers across candidate associations)."""
+    d = makespan_distribution(problem, assoc, a, b, rounds=rounds,
+                              max_staleness=max_staleness, model=model,
+                              key=key, num_trials=num_trials)
+    return float(np.quantile(d["async_makespans"], q))

@@ -32,6 +32,17 @@ makespan is directly comparable to the eq. 34 bound ``rounds * T``.
 Determinism: the event queue is keyed ``(time, edge, cycle)``, so tied
 timestamps resolve by edge index and the trace is bit-identical across
 runs; gated edges are released in edge-index order.
+
+Stochastic delays (``repro.core.stochastic``): ``cycle_times`` may be a
+``(C, M)`` matrix of PER-CYCLE draws instead of a constant ``(M,)``
+vector — edge ``m``'s ``c``-th cycle then costs ``cycle_times[c-1, m]``,
+i.e. each departure consumes a fresh draw.  The engine never samples
+itself: callers pre-draw the whole matrix in one vectorized call (no
+per-edge Python on the hot path) and the engine just indexes it, which
+keeps the trace a pure function of the matrix.  ``C`` must cover every
+cycle any edge can start: ``rounds + max_staleness`` rows suffice (an
+edge departs cycle ``k+1`` only while ``delivered < rounds*M`` with
+``k <= floor + max_staleness`` and ``floor <= rounds - 1``).
 """
 from __future__ import annotations
 
@@ -77,7 +88,7 @@ class AsyncTimeline:
     num_edges: int
     rounds: int
     max_staleness: int
-    cycle_times: np.ndarray              # (M,) b*tau_m + t_mc per edge
+    cycle_times: np.ndarray              # (M,) constant, or (C, M) per-cycle
     departures: List[Departure]
     updates: List[CloudUpdate]
     trace: List[tuple]
@@ -115,12 +126,24 @@ class AsyncTimeline:
                 out[e] += 1
         return out
 
+    def cycle_time_of(self, edge: int, cycle: int) -> float:
+        """Cost of edge ``edge``'s ``cycle``-th (1-based) cycle — constant
+        per edge, or that cycle's draw under a per-cycle matrix."""
+        ct = self.cycle_times
+        return float(ct[cycle - 1, edge] if ct.ndim == 2 else ct[edge])
+
     def edge_busy_frac(self) -> np.ndarray:
-        """(M,) fraction of the makespan each edge spent computing (its
-        merged cycles x its cycle time); the complement is gate idle time."""
+        """(M,) fraction of the makespan each edge spent computing (the
+        summed cost of its merged cycles); the complement is gate idle."""
         if self.makespan <= 0:
             return np.zeros(self.num_edges)
-        return self.merges_per_edge() * self.cycle_times / self.makespan
+        if self.cycle_times.ndim == 1:
+            return self.merges_per_edge() * self.cycle_times / self.makespan
+        busy = np.zeros(self.num_edges)
+        for u in self.updates:
+            for e, c, _ in u.merges:
+                busy[e] += self.cycle_time_of(e, c)
+        return busy / self.makespan
 
     def max_staleness_seen(self) -> int:
         return max((s for u in self.updates for _, _, s in u.merges),
@@ -132,19 +155,35 @@ def simulate_async(cycle_times, *, rounds: int, max_staleness: int,
     """Run the event-driven timeline over per-edge cycle times.
 
     cycle_times: (M,) positive floats, one full edge cycle each
-                 (``b * tau_m + t_{m->c}``, the per-edge term of eq. 34).
+                 (``b * tau_m + t_{m->c}``, the per-edge term of eq. 34) —
+                 or a (C, M) matrix of PER-CYCLE draws (row ``c-1`` is the
+                 cost of every edge's ``c``-th cycle; needs
+                 ``C >= rounds + max_staleness`` rows, see module doc).
     rounds:      synchronous-equivalent cloud rounds; the engine stops after
                  ``rounds * M`` deliveries (equal communication work).
     max_staleness: SSP cycle-lead bound; 0 = exact synchronous barrier.
     """
     cycle_times = np.asarray(cycle_times, dtype=float)
-    M = cycle_times.shape[0]
+    if cycle_times.ndim not in (1, 2):
+        raise ValueError(f"cycle_times must be (M,) or (C, M), got shape "
+                         f"{cycle_times.shape}")
+    M = cycle_times.shape[-1]
     if M == 0:
         raise ValueError("need at least one (active) edge")
     if np.any(cycle_times <= 0):
         raise ValueError("cycle times must be positive (drop inactive edges)")
     if rounds < 1 or max_staleness < 0:
         raise ValueError("rounds >= 1 and max_staleness >= 0 required")
+    if cycle_times.ndim == 2 and cycle_times.shape[0] < rounds + max_staleness:
+        raise ValueError(
+            f"per-cycle matrix needs >= rounds + max_staleness = "
+            f"{rounds + max_staleness} rows, got {cycle_times.shape[0]}")
+    if cycle_times.ndim == 2:
+        def cost(m: int, c: int) -> float:
+            return cycle_times[c - 1, m]
+    else:
+        def cost(m: int, c: int) -> float:
+            return cycle_times[m]
 
     quota = rounds * M
     departures: List[Departure] = []
@@ -161,7 +200,7 @@ def simulate_async(cycle_times, *, rounds: int, max_staleness: int,
         departures.append(d)
         trace.append(("depart", d))
         dep_version[m] = version
-        heapq.heappush(heap, (t + cycle_times[m], m, cycle))
+        heapq.heappush(heap, (t + cost(m, cycle), m, cycle))
 
     for m in range(M):
         depart(m, 1, start)

@@ -1,0 +1,353 @@
+"""Stochastic channel/compute delay engine — BEYOND-PAPER.
+
+The paper's delay model (eqs. 1-5, 8) is deterministic: every local
+iteration costs exactly ``C_n D_n / f_n``, every upload exactly
+``d_n / r_{n,m}``.  Its headline effect — stragglers dominating the
+eq. 34 barrier — only becomes *visible* when delays fluctuate per cycle:
+with constants, sync and async schedules degrade identically.  This
+module makes the per-cycle draws first-class, following the fading /
+heterogeneous-compute randomness of "To Talk or to Work" (arXiv
+2111.00637) and "Delay Minimization for FL over Wireless Networks"
+(arXiv 2007.03462).
+
+Design:
+
+* ``DelayModel`` — base protocol with three KEY-THREADED, VECTORIZED
+  sampling hooks (``sample_compute`` / ``sample_uplink`` /
+  ``sample_backhaul``), each returning the paper's deterministic value
+  broadcast over a leading draw axis by default, so a model only
+  describes what it randomizes.  One call samples every draw of every
+  UE/edge at once — the hot path has no per-edge Python (the eq. 33
+  member-max is one ``jax.ops.segment_max``).
+* ``DeterministicDelays`` — the exact paper constants, computed by the
+  same float64 numpy pipeline as ``core.delay`` (no jax on the path), so
+  threading it through the event engine reproduces the PR 3 sync and
+  async traces EVENT-FOR-EVENT.
+* ``LogNormalCompute`` / ``ShiftedExpCompute`` — per-cycle compute-time
+  jitter (mean-preserving lognormal; the classic straggler tail
+  ``t*(1 + beta*Exp(1))``).
+* ``FadingChannel`` — per-cycle Rayleigh power fades and lognormal
+  shadowing pushed through the paper's Shannon-rate uplink (eq. 4), so
+  ``t_{u,m}`` (eq. 5) and optionally ``t_{m,c}`` (eq. 8) become random
+  variables.
+* ``Compose`` — compute hooks from one model, channel hooks from
+  another.
+* ``Scenario`` registry — named workloads (``iid_campus``,
+  ``urban_stragglers``, ``flaky_uplink``, ...) composing the models into
+  the regimes the paper's analysis stresses.
+
+Draw semantics: one edge CYCLE costs ``sum_{j<b} tau_m^(j) + t_mc`` with
+``b`` independent edge-round draws (each round re-fades and re-jitters,
+eq. 33 applied per draw) plus one backhaul draw — sampled at each edge
+departure of the event timeline (``repro.core.events`` consumes a
+``(cycles, M)`` matrix).  Everything is seeded: the same key yields the
+same draws, the same timeline, on any host device count (jax PRNG is
+device-count invariant).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import delay
+from repro.core.problem import HFLProblem
+
+_LN10_OVER_10 = float(np.log(10.0) / 10.0)
+
+
+def ensure_key(key):
+    """Accept an int seed or a jax PRNG key; return a key."""
+    if isinstance(key, (int, np.integer)):
+        return jax.random.PRNGKey(int(key))
+    return key
+
+
+def _segment_max(per_ue, assoc):
+    """(D, N) per-UE round latencies -> (D, M) tau draws (eq. 33).
+
+    One ``segment_max`` scatter over the member UEs — the vectorized
+    member-max; edges with no members contribute 0.  UEs with an all-zero
+    association row are routed to an overflow segment and dropped, like
+    ``delay.edge_round_time``'s ``np.nonzero`` does.
+    """
+    assoc = np.asarray(assoc)
+    M = assoc.shape[1]
+    gid = jnp.asarray(np.where(assoc.sum(1) > 0, assoc.argmax(1), M),
+                      jnp.int32)
+    tau = jax.ops.segment_max(per_ue.T, gid, num_segments=M + 1)[:M]
+    active = jnp.asarray(assoc.sum(0) > 0)
+    return jnp.where(active[:, None], tau, 0.0).T
+
+
+class DelayModel:
+    """Per-cycle delay sampler — override any subset of the three hooks.
+
+    The defaults return the paper's deterministic values broadcast over
+    the draw axis, so the base class itself is a (float32) deterministic
+    model; ``DeterministicDelays`` below is the float64-exact variant.
+    All hooks take a jax PRNG key (or int seed at the driver level) and a
+    ``num_draws`` count, and return every draw at once.
+    """
+
+    # -- ingredient hooks ---------------------------------------------------
+
+    def sample_compute(self, key, problem: HFLProblem, num_draws: int):
+        """(num_draws, N) per-local-iteration compute times (eq. 1)."""
+        del key
+        return jnp.broadcast_to(jnp.asarray(problem.t_cmp(), jnp.float32),
+                                (num_draws, problem.num_ues))
+
+    def sample_uplink(self, key, problem: HFLProblem, assoc, num_draws: int):
+        """(num_draws, N) UE->edge upload times under ``assoc`` (eqs. 4-5)."""
+        del key
+        t = problem.t_com(np.asarray(assoc))
+        return jnp.broadcast_to(jnp.asarray(t, jnp.float32),
+                                (num_draws, problem.num_ues))
+
+    def sample_backhaul(self, key, problem: HFLProblem, num_draws: int):
+        """(num_draws, M) edge->cloud upload times (eq. 8)."""
+        del key
+        return jnp.broadcast_to(
+            jnp.asarray(problem.t_edge_cloud(), jnp.float32),
+            (num_draws, problem.num_edges))
+
+    # -- drivers ------------------------------------------------------------
+
+    def edge_round_times(self, key, problem: HFLProblem, assoc, a,
+                         num_draws: int) -> np.ndarray:
+        """(num_draws, M) tau_m draws — eq. 33 over sampled ingredients."""
+        kc, ku = jax.random.split(ensure_key(key))
+        per_ue = (jnp.asarray(a, jnp.float32) *
+                  self.sample_compute(kc, problem, num_draws) +
+                  self.sample_uplink(ku, problem, assoc, num_draws))
+        return np.asarray(_segment_max(per_ue, np.asarray(assoc)), float)
+
+    def cycle_times(self, key, problem: HFLProblem, assoc, a, b,
+                    num_draws: int) -> np.ndarray:
+        """(num_draws, M) per-cycle times ``sum_{j<b} tau^(j) + t_mc``.
+
+        The ``b`` edge rounds of one cycle are drawn independently (each
+        round re-fades and re-jitters) and summed; inactive edges stay 0.
+        One batched draw covers every cycle of every edge — no per-edge
+        Python, no per-wave resampling.
+        """
+        kr, kb = jax.random.split(ensure_key(key))
+        b = int(b)
+        tau = jnp.asarray(self.edge_round_times(kr, problem, assoc, a,
+                                                num_draws * b))
+        tau = tau.reshape(num_draws, b, problem.num_edges).sum(axis=1)
+        t_mc = self.sample_backhaul(kb, problem, num_draws)
+        active = jnp.asarray(np.asarray(assoc).sum(0) > 0)
+        return np.asarray(tau + jnp.where(active[None, :], t_mc, 0.0), float)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeterministicDelays(DelayModel):
+    """The paper's exact constants — eq. 33/34 with zero variance.
+
+    Overrides the drivers with the float64 numpy pipeline of
+    ``core.delay`` (jax never touches the values), so every draw row is
+    bit-identical to ``delay.edge_cycle_time`` and the event engine
+    reproduces the constant-delay traces event-for-event.
+    """
+
+    def edge_round_times(self, key, problem, assoc, a, num_draws):
+        del key
+        return np.tile(delay.edge_round_time(problem, np.asarray(assoc), a),
+                       (num_draws, 1))
+
+    def cycle_times(self, key, problem, assoc, a, b, num_draws):
+        del key
+        return np.tile(delay.edge_cycle_time(problem, np.asarray(assoc),
+                                             a, b), (num_draws, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class LogNormalCompute(DelayModel):
+    """Mean-preserving lognormal compute jitter.
+
+    Per cycle, ``t_cmp -> t_cmp * exp(sigma*z - sigma^2/2)`` with
+    ``z ~ N(0,1)`` per UE, so ``E[t] = C_n D_n / f_n`` exactly (the
+    deterministic eq. 1 value is the mean, not the floor).  ``sigma`` is
+    the log-std: 0.2 is mild campus-grade jitter, 1.0 is heavy-tailed.
+    """
+    sigma: float = 0.5
+
+    def sample_compute(self, key, problem, num_draws):
+        z = jax.random.normal(key, (num_draws, problem.num_ues))
+        jitter = jnp.exp(self.sigma * z - 0.5 * self.sigma ** 2)
+        return jnp.asarray(problem.t_cmp(), jnp.float32) * jitter
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftedExpCompute(DelayModel):
+    """Shifted-exponential straggler tail: ``t_cmp * (1 + beta*Exp(1))``.
+
+    The classic coded-computation straggler model — a UE is never faster
+    than eq. 1 and occasionally much slower; ``beta`` is the mean
+    overhead fraction (mean ``= (1+beta) * t_cmp``).
+    """
+    beta: float = 1.0
+
+    def sample_compute(self, key, problem, num_draws):
+        e = jax.random.exponential(key, (num_draws, problem.num_ues))
+        return (jnp.asarray(problem.t_cmp(), jnp.float32) *
+                (1.0 + self.beta * e))
+
+
+@dataclasses.dataclass(frozen=True)
+class FadingChannel(DelayModel):
+    """Per-cycle channel draws through the paper's Shannon-rate uplink.
+
+    The deterministic eq. 4 rate uses the free-space path-loss gain
+    ``g_{n,m}``; here each cycle multiplies it by a random power fade
+
+        ``fade = |h|^2 * 10^(shadowing_db * z / 10)``
+
+    with ``|h|^2 ~ Exp(1)`` (Rayleigh, if enabled) and ``z ~ N(0,1)``
+    (lognormal shadowing, median 1), clipped below at ``fade_floor``
+    (deep-fade retransmission cutoff — keeps rates positive, bounds the
+    worst upload).  eq. 5's ``t_{u,m} = d_n / r_{n,m}`` then fluctuates
+    per cycle.  ``backhaul_sigma > 0`` additionally applies a
+    mean-preserving lognormal to eq. 8's ``t_{m,c}``.
+    """
+    rayleigh: bool = True
+    shadowing_db: float = 0.0
+    backhaul_sigma: float = 0.0
+    fade_floor: float = 1e-2
+
+    def sample_uplink(self, key, problem, assoc, num_draws):
+        assoc = np.asarray(assoc)
+        N = problem.num_ues
+        gid = assoc.argmax(1)
+        counts = assoc.sum(0)
+        bn = problem.bandwidth_total / np.maximum(counts, 1)[gid]    # (N,)
+        snr0 = problem.snr()[np.arange(N), gid]                      # (N,)
+        kf, ks = jax.random.split(key)
+        fade = jnp.ones((num_draws, N))
+        if self.rayleigh:
+            fade = jax.random.exponential(kf, (num_draws, N))
+        if self.shadowing_db > 0:
+            z = jax.random.normal(ks, (num_draws, N))
+            fade = fade * jnp.exp(_LN10_OVER_10 * self.shadowing_db * z)
+        fade = jnp.maximum(fade, self.fade_floor)
+        rate = (jnp.asarray(bn, jnp.float32) *
+                jnp.log2(1.0 + jnp.asarray(snr0, jnp.float32) * fade))
+        return jnp.asarray(problem.model_bits, jnp.float32) / rate
+
+    def sample_backhaul(self, key, problem, num_draws):
+        base = jnp.asarray(problem.t_edge_cloud(), jnp.float32)
+        if self.backhaul_sigma <= 0:
+            return jnp.broadcast_to(base, (num_draws, problem.num_edges))
+        z = jax.random.normal(key, (num_draws, problem.num_edges))
+        return base * jnp.exp(self.backhaul_sigma * z -
+                              0.5 * self.backhaul_sigma ** 2)
+
+
+_DET_HOOKS = DelayModel()
+
+
+@dataclasses.dataclass(frozen=True)
+class Compose(DelayModel):
+    """Compute hooks from ``compute``, channel hooks from ``channel``.
+
+    Either side defaults to the deterministic hooks, so
+    ``Compose(compute=LogNormalCompute(0.2))`` randomizes compute only.
+    """
+    compute: Optional[DelayModel] = None
+    channel: Optional[DelayModel] = None
+
+    def sample_compute(self, key, problem, num_draws):
+        return (self.compute or _DET_HOOKS).sample_compute(
+            key, problem, num_draws)
+
+    def sample_uplink(self, key, problem, assoc, num_draws):
+        return (self.channel or _DET_HOOKS).sample_uplink(
+            key, problem, assoc, num_draws)
+
+    def sample_backhaul(self, key, problem, num_draws):
+        return (self.channel or _DET_HOOKS).sample_backhaul(
+            key, problem, num_draws)
+
+
+# ---------------------------------------------------------------------------
+# Scenario registry — named workloads composing the models.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named stochastic workload: which distributions, stressing what."""
+    name: str
+    model: DelayModel
+    regime: str            # which paper regime the workload stresses
+    description: str
+
+
+SCENARIOS: Dict[str, Scenario] = {
+    s.name: s for s in (
+        Scenario(
+            name="deterministic",
+            model=DeterministicDelays(),
+            regime="the paper's exact eqs. 1-5/34 (control)",
+            description="Zero variance; sync == async at max_staleness=0, "
+                        "event-for-event."),
+        Scenario(
+            name="iid_campus",
+            model=Compose(compute=LogNormalCompute(sigma=0.2),
+                          channel=FadingChannel(rayleigh=False,
+                                                shadowing_db=2.0)),
+            regime="near-homogeneous fleet; eq. 34's barrier is nearly "
+                   "tight, async gains are small",
+            description="Mild iid jitter: lognormal compute (sigma=0.2) + "
+                        "2 dB shadowing, no fast fading."),
+        Scenario(
+            name="urban_stragglers",
+            model=Compose(compute=ShiftedExpCompute(beta=1.5),
+                          channel=FadingChannel(rayleigh=True,
+                                                shadowing_db=4.0)),
+            regime="straggler-dominated eq. 34 barrier — the regime the "
+                   "paper's Algorithm 2/3 optimize for",
+            description="Heavy shifted-exponential compute tail "
+                        "(beta=1.5) + Rayleigh fading with 4 dB "
+                        "shadowing."),
+        Scenario(
+            name="flaky_uplink",
+            model=FadingChannel(rayleigh=True, shadowing_db=8.0,
+                                backhaul_sigma=0.5),
+            regime="channel-dominated delays: eq. 5 uploads and eq. 8 "
+                   "backhaul spike while compute stays constant",
+            description="Deep Rayleigh fades with 8 dB shadowing and "
+                        "lognormal backhaul jitter (sigma=0.5)."),
+        Scenario(
+            name="heavy_tail_compute",
+            model=ShiftedExpCompute(beta=3.0),
+            regime="pure compute stragglers on a clean channel (the "
+                   "arXiv 2111.00637 'work' side)",
+            description="Shifted-exponential compute with beta=3.0; "
+                        "channel deterministic."),
+    )
+}
+
+
+def scenario(name: str) -> Scenario:
+    """Look up a named scenario; raises with the available names."""
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; available: "
+                       f"{sorted(SCENARIOS)}") from None
+
+
+def sample_cycle_times(model: DelayModel, key, problem: HFLProblem, assoc,
+                       a, b, num_draws: int) -> np.ndarray:
+    """Module-level alias for ``model.cycle_times`` (the hot path).
+
+    Returns a float64 numpy ``(num_draws, M)`` matrix ready for
+    ``events.simulate_async`` (rows = consecutive cycles).
+    """
+    return model.cycle_times(key, problem, assoc, a, b, num_draws)

@@ -37,6 +37,13 @@ version_lag`` (``flat_staleness_merge`` — one psum under a mesh).  At
 ``max_staleness=0`` the trajectory reproduces the synchronous path to
 float tolerance; with a bound > 0 fast edges re-enter immediately and the
 makespan drops strictly below the eq. 34 bound on heterogeneous fleets.
+
+Stochastic clock (``delay_model=``, BEYOND-PAPER): a
+``repro.core.stochastic.DelayModel`` replaces the constant delays with
+keyed per-cycle draws — sync rounds cost the per-round ``max_m`` draw,
+async departures each consume a fresh row of the pre-sampled cycle
+matrix.  ``delay_seed`` keys the draws; ``DeterministicDelays`` (and the
+default ``None``) keep today's behavior exactly.
 """
 from __future__ import annotations
 
@@ -76,7 +83,17 @@ class HFLSimulator:
                  solver: str = "gd", dane_mu: float = 0.1,
                  samples_per_ue: Optional[int] = None, seed: int = 0,
                  mesh=None, mode: str = "sync", max_staleness: int = 0,
-                 staleness_decay: float = 0.9):
+                 staleness_decay: float = 0.9, delay_model=None,
+                 delay_seed: int = 0):
+        """``delay_model`` (a ``repro.core.stochastic.DelayModel``) makes
+        the CLOCK stochastic in both modes: sync rounds cost that round's
+        ``max_m`` cycle draw instead of the constant eq. 34 ``T``, async
+        departures each consume a fresh per-cycle draw.  The draws are
+        keyed by ``delay_seed`` (same seed => identical clock and trace);
+        ``DeterministicDelays()`` — or the default ``None`` — reproduces
+        the constant-delay behavior exactly.  The MODEL trajectory only
+        depends on the event order, so under ``DeterministicDelays`` it
+        is unchanged too."""
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
         if mode == "async" and solver != "gd":
@@ -84,6 +101,11 @@ class HFLSimulator:
                              "global gradient assumes a synchronized fleet)")
         if max_staleness < 0:
             raise ValueError("max_staleness must be >= 0")
+        if delay_model is not None and schedule.problem is None:
+            raise ValueError("delay_model= needs schedule.problem to sample "
+                             "the delay ingredients (eqs. 1-5, 8)")
+        self.delay_model = delay_model
+        self.delay_seed = int(delay_seed)
         self.schedule = schedule
         self.loss_fn = loss_fn
         self.lr = lr
@@ -278,13 +300,21 @@ class HFLSimulator:
             return self._run_async(test_batch, rounds, eval_every, verbose)
         sched = self.schedule
         rounds = rounds or sched.rounds
-        t_round = sched.cloud_round_time                 # eq. (34)
+        if self.delay_model is not None:
+            # One batched draw for the whole run: round r costs the max
+            # over edges of that round's cycle draw (stochastic eq. 34).
+            draws = self.delay_model.cycle_times(
+                self.delay_seed, sched.problem, sched.assoc, sched.a,
+                sched.b, rounds)
+            round_times = np.asarray(draws).max(axis=1)
+        else:
+            round_times = np.full(rounds, sched.cloud_round_time)  # eq. (34)
         times, accs, tlosses, trlosses = [], [], [], []
         clock = 0.0
         test_batch = jax.tree.map(jnp.asarray, test_batch)
         for r in range(rounds):
             self._flat = self._cloud_round(self._flat, self._hot_batches)
-            clock += t_round
+            clock += float(round_times[r])
             if (r + 1) % eval_every == 0 or r == rounds - 1:
                 gp = self.global_params()
                 loss, mets = self.loss_fn(gp, test_batch)
@@ -319,7 +349,9 @@ class HFLSimulator:
         rounds = rounds or sched.rounds
         stats = delay.async_completion(sched.problem, sched.assoc, sched.a,
                                        sched.b, rounds=rounds,
-                                       max_staleness=self.max_staleness)
+                                       max_staleness=self.max_staleness,
+                                       delay_model=self.delay_model,
+                                       key=self.delay_seed)
         tl = stats["timeline"]
         active = np.asarray(stats["active_edges"])
         gids = np.asarray(self._hot_gids)

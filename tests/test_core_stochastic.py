@@ -1,0 +1,218 @@
+"""Stochastic delay engine: seeded reproducibility, deterministic-model
+parity with the constant-delay traces, distribution sanity, and the
+robust (p95) association objective."""
+import numpy as np
+import pytest
+
+from repro.core import assoc as assoc_lib
+from repro.core import delay, events, stochastic
+from repro.core.problem import HFLProblem
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return HFLProblem(num_edges=4, num_ues=24, epsilon=0.25, seed=0)
+
+
+@pytest.fixture(scope="module")
+def A(prob):
+    return assoc_lib.proposed(prob)
+
+
+def test_deterministic_model_matches_delay_module_exactly(prob, A):
+    """Every row of the DeterministicDelays drivers is bit-identical to
+    the core.delay float64 pipeline."""
+    det = stochastic.DeterministicDelays()
+    a, b = 8, 3
+    tau = det.edge_round_times(0, prob, A, a, 5)
+    np.testing.assert_array_equal(
+        tau, np.tile(delay.edge_round_time(prob, A, a), (5, 1)))
+    cyc = det.cycle_times(123, prob, A, a, b, 4)
+    np.testing.assert_array_equal(
+        cyc, np.tile(delay.edge_cycle_time(prob, A, a, b), (4, 1)))
+
+
+def test_deterministic_model_reproduces_async_trace_event_for_event(prob, A):
+    """The acceptance bar: async_completion(delay_model=Deterministic...)
+    == the PR 3 constant-delay path, event-for-event."""
+    a, b, rounds = 8, 3, 6
+    for s_max in (0, 2):
+        r0 = delay.async_completion(prob, A, a, b, rounds=rounds,
+                                    max_staleness=s_max)
+        r1 = delay.async_completion(prob, A, a, b, rounds=rounds,
+                                    max_staleness=s_max,
+                                    delay_model=stochastic
+                                    .DeterministicDelays())
+        t0, t1 = r0["timeline"], r1["timeline"]
+        assert [(u.t, u.version, u.merges) for u in t0.updates] == \
+               [(u.t, u.version, u.merges) for u in t1.updates]
+        assert [(d.t, d.edge, d.cycle, d.version) for d in t0.departures] \
+            == [(d.t, d.edge, d.cycle, d.version) for d in t1.departures]
+        assert r0["makespan"] == r1["makespan"]
+        assert r0["sync_makespan"] == pytest.approx(r1["sync_makespan"],
+                                                    rel=1e-12)
+        np.testing.assert_allclose(r0["edge_busy_frac"],
+                                   r1["edge_busy_frac"], rtol=1e-12)
+
+
+def test_same_key_same_draws_same_trace(prob, A):
+    model = stochastic.scenario("urban_stragglers").model
+    a, b = 8, 3
+    d1 = stochastic.sample_cycle_times(model, 7, prob, A, a, b, 16)
+    d2 = stochastic.sample_cycle_times(model, 7, prob, A, a, b, 16)
+    d3 = stochastic.sample_cycle_times(model, 8, prob, A, a, b, 16)
+    np.testing.assert_array_equal(d1, d2)
+    assert not np.array_equal(d1, d3)
+    r1 = delay.async_completion(prob, A, a, b, rounds=5, max_staleness=2,
+                                delay_model=model, key=7)
+    r2 = delay.async_completion(prob, A, a, b, rounds=5, max_staleness=2,
+                                delay_model=model, key=7)
+    assert r1["timeline"].trace == r2["timeline"].trace
+    assert r1["makespan"] == r2["makespan"]
+
+
+def test_model_distributions_are_sane(prob, A):
+    """Positivity everywhere; mean-preservation for LogNormalCompute;
+    shifted-exp never beats the deterministic floor; fading fluctuates."""
+    a = 8
+    t_cmp = prob.t_cmp()
+    import jax
+    key = jax.random.PRNGKey(0)
+    ln = stochastic.LogNormalCompute(sigma=0.5)
+    draws = np.asarray(ln.sample_compute(key, prob, 4000))
+    assert (draws > 0).all()
+    np.testing.assert_allclose(draws.mean(0), t_cmp, rtol=0.15)
+    se = stochastic.ShiftedExpCompute(beta=1.0)
+    draws = np.asarray(se.sample_compute(key, prob, 200))
+    assert (draws >= t_cmp[None, :] * (1 - 1e-6)).all()
+    fc = stochastic.FadingChannel(rayleigh=True, shadowing_db=6.0,
+                                  backhaul_sigma=0.4)
+    up = np.asarray(fc.sample_uplink(key, prob, A, 64))
+    bh = np.asarray(fc.sample_backhaul(key, prob, 64))
+    assert (up > 0).all() and np.isfinite(up).all()
+    assert up.std(0).min() > 0           # every UE's channel fluctuates
+    assert (bh > 0).all() and bh.std(0).min() > 0
+    # the fade floor bounds the worst upload
+    worst = prob.model_bits / (
+        (prob.bandwidth_total / np.maximum(A.sum(0), 1)[A.argmax(1)]) *
+        np.log2(1.0 + prob.snr()[np.arange(prob.num_ues), A.argmax(1)] *
+                fc.fade_floor))
+    assert (up <= worst[None, :] * (1 + 1e-5)).all()
+    for name in stochastic.SCENARIOS:
+        cyc = stochastic.sample_cycle_times(
+            stochastic.scenario(name).model, 0, prob, A, a, 3, 8)
+        assert cyc.shape == (8, prob.num_edges)
+        assert (cyc > 0).all() and np.isfinite(cyc).all()
+
+
+def test_edge_round_time_stats_and_quantiles(prob, A):
+    a = 8
+    model = stochastic.scenario("urban_stragglers").model
+    stats = delay.edge_round_time_stats(prob, A, a, model=model, key=0,
+                                        num_samples=256, qs=(0.5, 0.95))
+    tau = delay.edge_round_time(prob, A, a)
+    # quantiles are ordered and the p95 strictly dominates the
+    # deterministic eq. 33 value (the straggler inflation)
+    assert (stats["quantiles"][0.95] >= stats["quantiles"][0.5]).all()
+    assert (stats["quantiles"][0.95] > tau).all()
+    det = stochastic.DeterministicDelays()
+    np.testing.assert_array_equal(
+        delay.quantile_edge_round_time(prob, A, a, 0.95, model=det), tau)
+    np.testing.assert_allclose(
+        delay.expected_edge_round_time(prob, A, a, model=det), tau,
+        rtol=1e-12)
+
+
+def test_makespan_distribution_barrier_parity_and_async_gain(prob, A):
+    a, b, rounds = 8, 3, 6
+    model = stochastic.scenario("urban_stragglers").model
+    d0 = delay.makespan_distribution(prob, A, a, b, rounds=rounds,
+                                     max_staleness=0, model=model, key=3,
+                                     num_trials=8)
+    # barrier mode == the per-trial stochastic sync barrier, exactly
+    np.testing.assert_allclose(d0["async_makespans"], d0["sync_makespans"],
+                               rtol=1e-12)
+    d2 = delay.makespan_distribution(prob, A, a, b, rounds=rounds,
+                                     max_staleness=2, model=model, key=3,
+                                     num_trials=24)
+    assert d2["async_p50"] < d2["sync_p50"]
+    assert d2["async_p95"] < d2["sync_p95"]
+    # the stochastic sync barrier dominates the deterministic bound: the
+    # shifted-exp tail only ever adds delay (E[max] >= max E)
+    det_bound = rounds * delay.cloud_round_time(prob, A, a, b)
+    assert d2["sync_p50"] > det_bound
+
+
+def test_per_cycle_matrix_validation():
+    with pytest.raises(ValueError):
+        events.simulate_async(np.ones((2, 3, 1)), rounds=1, max_staleness=0)
+    with pytest.raises(ValueError):   # too few rows for rounds + staleness
+        events.simulate_async(np.ones((3, 2)), rounds=3, max_staleness=1)
+    with pytest.raises(ValueError):   # non-positive draw
+        ct = np.ones((4, 2))
+        ct[2, 1] = 0.0
+        events.simulate_async(ct, rounds=3, max_staleness=1)
+    # constant rows == constant vector, event-for-event
+    tl_v = events.simulate_async([1.0, 2.5], rounds=3, max_staleness=1)
+    tl_m = events.simulate_async(np.tile([1.0, 2.5], (4, 1)), rounds=3,
+                                 max_staleness=1)
+    assert tl_v.trace == tl_m.trace
+    np.testing.assert_allclose(tl_v.edge_busy_frac(), tl_m.edge_busy_frac())
+
+
+def test_quantile_association_no_worse_than_greedy_on_p95():
+    """The robust association beats Alg. 3 AND the greedy baseline on the
+    p95 async makespan under the straggler scenario."""
+    rob = HFLProblem(num_edges=3, num_ues=12, seed=0,
+                     cycles_per_sample_lo=1e3, cycles_per_sample_hi=3e5)
+    a, b, rounds, s_max = 8, 3, 6, 2
+    model = stochastic.scenario("urban_stragglers").model
+    kw = dict(rounds=rounds, max_staleness=s_max, model=model, key=0,
+              num_trials=12, q=0.95)
+    base = delay.quantile_makespan(rob, assoc_lib.proposed(rob), a, b, **kw)
+    greedy = delay.quantile_makespan(rob, assoc_lib.greedy(rob), a, b, **kw)
+    A_rob = assoc_lib.refined(rob, a=a, objective="quantile_makespan", b=b,
+                              rounds=rounds, max_staleness=s_max,
+                              num_trials=12, max_moves=5, delay_key=0)
+    tuned = delay.quantile_makespan(rob, A_rob, a, b, **kw)
+    assert tuned <= base + 1e-9
+    assert tuned <= greedy + 1e-9
+    assert (A_rob.sum(1) == 1).all()
+
+
+def test_unassigned_ues_are_ignored_like_the_deterministic_pipeline():
+    """UEs with an all-zero association row must not leak into any edge's
+    tau — `delay.edge_round_time` drops them via np.nonzero, and the
+    stochastic hooks must agree on the same partial input."""
+    prob = HFLProblem(num_edges=3, num_ues=6, seed=2)
+    A = np.zeros((6, 3), dtype=np.int64)
+    A[0, 0] = A[1, 1] = A[2, 2] = A[3, 0] = 1          # UEs 4, 5 unassigned
+    a, b = 8, 3
+    base = stochastic.DelayModel()
+    np.testing.assert_allclose(
+        base.edge_round_times(0, prob, A, a, 4),
+        np.tile(delay.edge_round_time(prob, A, a), (4, 1)), rtol=1e-6)
+    np.testing.assert_allclose(
+        base.cycle_times(0, prob, A, a, b, 4),
+        np.tile(delay.edge_cycle_time(prob, A, a, b), (4, 1)), rtol=1e-6)
+    # stochastic models stay finite/positive and unaffected by the
+    # unassigned rows' draws: zeroing their compute changes nothing
+    model = stochastic.scenario("urban_stragglers").model
+    cyc = stochastic.sample_cycle_times(model, 0, prob, A, a, b, 8)
+    slow = prob.cycles.copy()
+    prob.cycles = slow.copy()
+    prob.cycles[4:] = 1e9                              # make them huge
+    try:
+        cyc2 = stochastic.sample_cycle_times(model, 0, prob, A, a, b, 8)
+    finally:
+        prob.cycles = slow
+    np.testing.assert_array_equal(cyc, cyc2)
+
+
+def test_scenario_registry_lookup():
+    assert set(stochastic.SCENARIOS) >= {"deterministic", "iid_campus",
+                                         "urban_stragglers", "flaky_uplink"}
+    s = stochastic.scenario("flaky_uplink")
+    assert s.name == "flaky_uplink" and s.regime and s.description
+    with pytest.raises(KeyError):
+        stochastic.scenario("nope")

@@ -122,6 +122,54 @@ def test_async_argument_validation(async_setup):
                      max_staleness=-1)
 
 
+def test_delay_model_deterministic_parity_sync_and_async(async_setup):
+    """HFLSimulator(delay_model=DeterministicDelays()) reproduces the
+    constant-delay clock bit-exactly and the trajectory to <= 1e-5, in
+    BOTH modes."""
+    from repro.core import stochastic
+    sch, init, ue_data, test = async_setup
+    det = stochastic.DeterministicDelays()
+    for kw in (dict(), dict(mode="async", max_staleness=2)):
+        r0 = HFLSimulator(sch, _loss_fn, init, ue_data, lr=0.02,
+                          **kw).run(test, rounds=3)
+        r1 = HFLSimulator(sch, _loss_fn, init, ue_data, lr=0.02,
+                          delay_model=det, **kw).run(test, rounds=3)
+        np.testing.assert_array_equal(r1.times, r0.times)
+        np.testing.assert_allclose(r1.test_loss, r0.test_loss, atol=1e-5)
+        np.testing.assert_allclose(r1.train_loss, r0.train_loss, atol=1e-5)
+
+
+def test_delay_model_stochastic_clock_is_seeded(async_setup):
+    """A stochastic model keeps the run deterministic per seed (same seed
+    => identical clock AND trace) and produces a different clock under a
+    different seed; the sync stochastic clock is strictly increasing."""
+    from repro.core import stochastic
+    sch, init, ue_data, test = async_setup
+    model = stochastic.scenario("urban_stragglers").model
+    mk = lambda seed: HFLSimulator(sch, _loss_fn, init, ue_data, lr=0.02,
+                                   mode="async", max_staleness=2,
+                                   delay_model=model, delay_seed=seed)
+    r1, r2, r3 = (mk(5).run(test, rounds=3), mk(5).run(test, rounds=3),
+                  mk(6).run(test, rounds=3))
+    np.testing.assert_array_equal(r1.times, r2.times)
+    np.testing.assert_array_equal(r1.test_loss, r2.test_loss)
+    assert not np.array_equal(r1.times, r3.times)
+    rs = HFLSimulator(sch, _loss_fn, init, ue_data, lr=0.02,
+                      delay_model=model, delay_seed=5).run(test, rounds=3)
+    assert np.all(np.diff(rs.times) > 0)
+    assert not np.allclose(np.diff(rs.times), np.diff(rs.times)[0])
+
+
+def test_delay_model_requires_problem(async_setup):
+    import dataclasses
+    from repro.core import stochastic
+    sch, init, ue_data, _ = async_setup
+    bare = dataclasses.replace(sch, problem=None)
+    with pytest.raises(ValueError):
+        HFLSimulator(bare, _loss_fn, init, ue_data,
+                     delay_model=stochastic.scenario("iid_campus").model)
+
+
 def test_async_requires_problem_for_cycle_times(async_setup):
     import dataclasses
     sch, init, ue_data, test = async_setup

@@ -177,6 +177,30 @@ ASYNC_SIM_SCRIPT = textwrap.dedent("""
 """)
 
 
+DRAWS_SCRIPT = textwrap.dedent("""
+    import os, sys
+    n = sys.argv[2]
+    if n != "1":
+        os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    sys.path.insert(0, sys.argv[1])
+    import numpy as np
+    from repro.core import assoc, delay, stochastic
+    from repro.core.problem import HFLProblem
+
+    prob = HFLProblem(num_edges=3, num_ues=12, seed=0)
+    A = assoc.proposed(prob)
+    for name in sorted(stochastic.SCENARIOS):
+        d = stochastic.sample_cycle_times(
+            stochastic.scenario(name).model, 7, prob, A, 8, 3, 16)
+        print(name, np.asarray(d, np.float64).tobytes().hex())
+    r = delay.async_completion(prob, A, 8, 3, rounds=4, max_staleness=2,
+                               delay_model=stochastic
+                               .scenario("urban_stragglers").model, key=7)
+    print("trace", [(u.t, u.merges) for u in r["timeline"].updates])
+""")
+
+
 def _run(script):
     r = subprocess.run([sys.executable, "-c", script, SRC],
                        capture_output=True, text=True, timeout=600)
@@ -197,6 +221,21 @@ def test_simulator_mesh_trajectory_parity():
 @pytest.mark.slow
 def test_async_simulator_mesh_trajectory_parity():
     _run(ASYNC_SIM_SCRIPT)
+
+
+@pytest.mark.slow
+def test_stochastic_draws_invariant_to_device_count():
+    """The keyed delay draws (and the resulting async trace) must be
+    bit-identical under 1 vs 8 forced host devices — schedules computed
+    on a sharded fleet replay exactly on a single-device one."""
+    outs = []
+    for n in ("1", "8"):
+        r = subprocess.run([sys.executable, "-c", DRAWS_SCRIPT, SRC, n],
+                           capture_output=True, text=True, timeout=600)
+        assert r.returncode == 0, r.stderr[-3000:]
+        outs.append(r.stdout)
+    assert outs[0] == outs[1]
+    assert "trace" in outs[0]
 
 
 def test_sharded_layout_padding_round_trip_single_device():
