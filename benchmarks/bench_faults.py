@@ -1,0 +1,193 @@
+"""Benchmark: fault-injected HFL — naive wait-for-all vs deadline+failover.
+
+For each fault scenario in ``repro.core.stochastic.SCENARIOS`` that
+carries a non-null ``faults`` process (``ue_churn`` / ``edge_outage`` /
+``lossy_uplink``) this Monte-Carlos the async makespan over ``TRIALS``
+keyed fault draws under BOTH handling policies (common random numbers —
+each trial key prices both policies on the same dropout/loss/outage
+realization, so the per-trial gap isolates the policy):
+
+* ``wait_for_all`` — the naive baseline: the synchronous barrier that
+  waits out churned UEs (comeback stalls), retries lost uploads without
+  bound, and sits through edge outages (repair + voided in-flight work);
+* ``deadline_failover`` — the failure-aware protocol: per-edge deadline
+  ``D_m`` cuts stragglers via zero-weight masking, retries are capped
+  with exponential backoff charged into the eq. 4/5 delay, and failed
+  edges hand their cohort to the engine's failover path.
+
+The second half runs the FULL FL simulator (``repro.fl.sim``) under each
+fault scenario and measures end-model quality: the deadline policy drops
+work, so its final global loss must stay within ``LOSS_DEGRADATION`` of
+the fault-free run — time saved must not be bought with accuracy.
+
+Asserted invariants (the PR's acceptance bar):
+
+* deadline+failover STRICTLY beats wait-for-all at BOTH p50 and p95 on
+  all three fault scenarios;
+* every faulted FL run stays finite (a fully-dropped cohort contributes
+  zero, never NaN) and final loss degrades <= 10% vs fault-free;
+* zero-fault-rate models route to the legacy paths (``FaultModel()``
+  is-null parity, checked here end-to-end on the simulator).
+
+Results land in ``benchmarks/BENCH_faults.json``.  ``--smoke`` (the CI
+entry point) shrinks trials/rounds but keeps every assertion except the
+loss bar, which needs the full round budget to converge.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import assoc as assoc_lib
+from repro.core import delay, faults, iteropt, stochastic
+from repro.core.problem import HFLProblem
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "BENCH_faults.json")
+
+FAULT_SCENARIOS = ("ue_churn", "edge_outage", "lossy_uplink")
+ROUNDS = 8
+TRIALS = 32
+N_UES, N_EDGES = 24, 4
+MAX_STALENESS = 1          # failover needs >= 1; wait_for_all ignores it
+FL_ROUNDS = 12
+LOSS_DEGRADATION = 0.10
+
+
+def _policies():
+    return {
+        "wait_for_all": faults.wait_for_all_policy(),
+        "deadline_failover": faults.deadline_failover_policy(),
+    }
+
+
+def _fl_setup(prob):
+    """Small logreg federation matching the scenario problem."""
+    import jax
+
+    from repro.core import schedule
+    from repro.data import partition, synthetic
+    from repro.models import lenet
+
+    sch = schedule.plan(prob)
+    n_train = int(prob.samples.sum())
+    train = synthetic.logreg_data(seed=0, n=n_train, dim=12, num_classes=4)
+    test = synthetic.logreg_data(seed=1, n=200, dim=12, num_classes=4)
+    rng = np.random.default_rng(0)
+    parts = partition.size_partition(rng, n_train, prob.samples.astype(int))
+    ue_data = [{k: train[k][ix] for k in train} for ix in parts]
+    init = lenet.logreg_init(jax.random.PRNGKey(0), 12, 4)
+
+    def loss_fn(p, b):
+        return lenet.logreg_loss(p, b, l2=1e-3)
+
+    return sch, loss_fn, init, ue_data, test
+
+
+def run(csv_rows: list, smoke: bool = False):
+    from repro.fl.sim import HFLSimulator
+
+    out = []
+    trials = 8 if smoke else TRIALS
+    rounds = 4 if smoke else ROUNDS
+    fl_rounds = 4 if smoke else FL_ROUNDS
+
+    prob = HFLProblem(num_edges=N_EDGES, num_ues=N_UES, seed=0)
+    A = assoc_lib.proposed(prob)
+    sol = iteropt.solve_direct(prob, A)
+    a, b = sol.a_int, sol.b_int
+    print(f"\n[faults] N={N_UES} M={N_EDGES} a={a} b={b} rounds={rounds} "
+          f"trials={trials}")
+    print("      scenario       wait-for-all p50/p95   "
+          "deadline+failover p50/p95   deliv_frac")
+
+    # -- makespan distributions: policy vs policy under CRN -------------
+    for name in FAULT_SCENARIOS:
+        scen = stochastic.scenario(name)
+        d = delay.fault_makespan_distribution(
+            prob, A, a, b, rounds=rounds, max_staleness=MAX_STALENESS,
+            fault_model=scen.faults, policies=_policies(),
+            delay_model=scen.model, key=0, num_trials=trials)
+        row = dict(case=name, a=a, b=b, rounds=rounds, trials=trials,
+                   max_staleness=MAX_STALENESS,
+                   wait_for_all_p50=d["wait_for_all_p50"],
+                   wait_for_all_p95=d["wait_for_all_p95"],
+                   deadline_failover_p50=d["deadline_failover_p50"],
+                   deadline_failover_p95=d["deadline_failover_p95"],
+                   wait_for_all_delivered_frac=d[
+                       "wait_for_all_delivered_frac"],
+                   deadline_failover_delivered_frac=d[
+                       "deadline_failover_delivered_frac"],
+                   speedup_p50=d["wait_for_all_p50"] /
+                   d["deadline_failover_p50"],
+                   speedup_p95=d["wait_for_all_p95"] /
+                   d["deadline_failover_p95"])
+        out.append(row)
+        print(f"      {name:14s} {row['wait_for_all_p50']:9.2f}/"
+              f"{row['wait_for_all_p95']:9.2f} "
+              f"{row['deadline_failover_p50']:12.2f}/"
+              f"{row['deadline_failover_p95']:9.2f}"
+              f"{row['deadline_failover_delivered_frac']:13.2f}")
+        csv_rows.append(("faults", name, row["deadline_failover_p50"],
+                         f"wfa_p50={row['wait_for_all_p50']:.2f};"
+                         f"speedup_p95={row['speedup_p95']:.3f}"))
+        assert row["deadline_failover_p50"] < row["wait_for_all_p50"] and \
+            row["deadline_failover_p95"] < row["wait_for_all_p95"], \
+            ("deadline+failover must beat wait-for-all at p50 AND p95", row)
+
+    # -- end-model quality: FL simulator under faults -------------------
+    fl_prob = HFLProblem(num_edges=3, num_ues=12, epsilon=0.25, seed=0,
+                         samples_lo=50, samples_hi=120)
+    sch, loss_fn, init, ue_data, test = _fl_setup(fl_prob)
+
+    clean = HFLSimulator(sch, loss_fn, init, ue_data,
+                         lr=0.02).run(test, rounds=fl_rounds)
+    # FaultModel() is null -> must take the exact legacy path, end to end.
+    null = HFLSimulator(sch, loss_fn, init, ue_data, lr=0.02,
+                        fault_model=faults.FaultModel()).run(
+                            test, rounds=fl_rounds)
+    np.testing.assert_array_equal(clean.test_loss, null.test_loss)
+    np.testing.assert_array_equal(clean.times, null.times)
+    loss0 = float(clean.test_loss[-1])
+    print(f"      FL fault-free: loss {loss0:.4f}  t={clean.times[-1]:.2f}s "
+          f"(null-fault parity ok)")
+    out.append(dict(case="fl-fault-free", rounds=fl_rounds, loss=loss0,
+                    makespan=float(clean.times[-1])))
+
+    for name in FAULT_SCENARIOS:
+        scen = stochastic.scenario(name)
+        res = HFLSimulator(
+            sch, loss_fn, init, ue_data, lr=0.02, fault_model=scen.faults,
+            fault_policy=faults.deadline_failover_policy(),
+            fault_seed=0).run(test, rounds=fl_rounds)
+        assert np.all(np.isfinite(res.test_loss)), (name, res.test_loss)
+        loss1 = float(res.test_loss[-1])
+        degr = (loss1 - loss0) / loss0
+        row = dict(case=f"fl-{name}", rounds=fl_rounds, loss=loss1,
+                   loss_degradation=degr, makespan=float(res.times[-1]),
+                   fault_free_loss=loss0)
+        out.append(row)
+        print(f"      FL {name:14s} loss {loss1:.4f} "
+              f"({degr:+.1%} vs fault-free)  t={res.times[-1]:.2f}s")
+        csv_rows.append(("faults", f"fl-{name}", loss1,
+                         f"degradation={degr:+.3f}"))
+        if not smoke:
+            assert degr <= LOSS_DEGRADATION, \
+                ("faulted final loss must stay within 10% of fault-free",
+                 row)
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"      wrote {len(out)} rows to {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI entry: fewer trials/rounds, loss bar skipped")
+    args = ap.parse_args()
+    rows: list = []
+    run(rows, smoke=args.smoke)

@@ -11,13 +11,14 @@ import argparse
 import csv
 import os
 import sys
+import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (bench_ablation, bench_association, bench_async,
-                        bench_convergence, bench_iterations, bench_kernels,
-                        bench_optimizer, bench_roofline, bench_serving,
-                        bench_shard, bench_stochastic)
+                        bench_convergence, bench_faults, bench_iterations,
+                        bench_kernels, bench_optimizer, bench_roofline,
+                        bench_serving, bench_shard, bench_stochastic)
 
 SUITES = {
     "iterations": bench_iterations.run,     # Figs. 2-3
@@ -28,6 +29,7 @@ SUITES = {
     "shard": bench_shard.run,               # mesh-sharded aggregation
     "async": bench_async.run,               # sync eq. 34 vs async timeline
     "stochastic": bench_stochastic.run,     # makespan dists under draws
+    "faults": bench_faults.run,             # fault policies + FL quality
     "roofline": bench_roofline.run,         # EXPERIMENTS.md §Roofline
     "ablation": bench_ablation.run,         # beyond-paper ablations
     "serving": bench_serving.run,           # decode throughput (smoke)
@@ -41,17 +43,27 @@ def main() -> None:
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
     rows: list = []
+    failed: list = []
     for name, fn in SUITES.items():
         if only and name not in only:
             continue
         print(f"\n===== {name} =====")
-        fn(rows)
+        try:
+            fn(rows)
+        except Exception:
+            # Keep the remaining suites running; report and exit non-zero
+            # at the end so CI flags the failure without masking it.
+            traceback.print_exc()
+            failed.append(name)
     out = os.path.join(os.path.dirname(__file__), "results.csv")
     with open(out, "w", newline="") as f:
         w = csv.writer(f)
         w.writerow(["suite", "name", "us_per_call", "derived"])
         w.writerows(rows)
     print(f"\nwrote {len(rows)} rows to {out}")
+    if failed:
+        print(f"FAILED suites: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -189,6 +189,83 @@ def _latency_terms(problem: HFLProblem, a: float):
     return t_fix, t_unit
 
 
+def failover(problem: HFLProblem, assoc: np.ndarray, dead_edges,
+             a: float = 10.0) -> np.ndarray:
+    """BEYOND-PAPER: incremental re-association after edge failures.
+
+    When edge servers in ``dead_edges`` go down (``repro.core.faults``
+    outage windows), their member UEs are ORPHANED.  This re-homes each
+    orphan onto a surviving edge, reusing the refined-search delta
+    machinery (``_latency_terms``): with the eq. 38 latency split
+    ``t_fix[n] + c * t_unit[n, m]``, placing one orphan only changes the
+    receiving edge's member count, so every candidate placement is an
+    O(members) delta re-score instead of a full O(N*M) ``t_com``
+    recompute.  Orphans are placed worst-first (highest best-case
+    latency), each onto the edge minimizing the resulting SYSTEM latency
+    — the same bottleneck criterion ``refined`` descends.
+
+    Capacity: the bandwidth cap (39d) is respected when feasible; when
+    the surviving edges cannot hold everyone under it, the cap relaxes
+    to ``ceil(N / M_alive)`` (UEs must land somewhere — degraded
+    service beats no service).  Rows that were all-zero stay all-zero;
+    dead edges end with zero members.
+    """
+    A = np.asarray(assoc).copy()
+    N, M = A.shape
+    dead = sorted({int(m) for m in np.atleast_1d(
+        np.asarray(dead_edges, dtype=int)).ravel()})
+    if any(m < 0 or m >= M for m in dead):
+        raise ValueError(f"dead_edges {dead} out of range for M={M}")
+    alive = [m for m in range(M) if m not in dead]
+    if not alive:
+        raise ValueError("no surviving edges to fail over to")
+    assigned = A.sum(1) > 0
+    orphans = np.flatnonzero(assigned & np.isin(A.argmax(1), dead))
+    if orphans.size == 0:
+        return A
+    n_assigned = int(assigned.sum())
+    cap = max(capacity_of(problem),
+              int(np.ceil(n_assigned / len(alive))))
+    t_fix, t_unit = _latency_terms(problem, a)
+    edge_of = np.where(assigned, A.argmax(1), -1)
+    members = {m: np.flatnonzero(edge_of == m).tolist() for m in alive}
+    counts = {m: len(members[m]) for m in alive}
+    el = {m: (float(np.max(t_fix[members[m]] +
+                           counts[m] * t_unit[members[m], m]))
+              if members[m] else 0.0) for m in alive}
+    # Worst-first: the orphan whose BEST surviving placement is costliest
+    # gets first pick (classic bottleneck ordering).
+    best_case = np.array([t_fix[n] + np.min(t_unit[n, alive])
+                          for n in orphans])
+    for n in orphans[np.argsort(-best_case)]:
+        best_m, best_val = None, np.inf
+        for m in alive:
+            if counts[m] >= cap:
+                continue
+            c_new = counts[m] + 1
+            mem = members[m]
+            el_m = t_fix[n] + c_new * t_unit[n, m]
+            if mem:
+                el_m = max(el_m, float(np.max(t_fix[mem] +
+                                              c_new * t_unit[mem, m])))
+            v = max(el_m, max((el[mm] for mm in alive if mm != m),
+                              default=0.0))
+            if v < best_val - 1e-12:
+                best_val, best_m = v, m
+        if best_m is None:          # every survivor at cap: force least-bad
+            best_m = min(alive, key=lambda m: counts[m])
+        A[n] = 0
+        A[n, best_m] = 1
+        members[best_m].append(int(n))
+        counts[best_m] += 1
+        c = counts[best_m]
+        mem = members[best_m]
+        el[best_m] = float(np.max(t_fix[mem] + c * t_unit[mem, best_m]))
+    assert (A.sum(1)[assigned] == 1).all()
+    assert (A[:, dead].sum() == 0).all() if dead else True
+    return A
+
+
 def refined(problem: HFLProblem, a: float = 10.0,
             max_moves: int = 500, incremental: bool = True,
             objective: str = "latency", b: float = 3.0, rounds: int = 8,

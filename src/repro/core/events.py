@@ -64,6 +64,23 @@ class Departure:
 
 
 @dataclasses.dataclass(frozen=True)
+class EdgeFail:
+    """Edge ``edge`` fails at time ``t`` while ``cycle`` was in flight;
+    that cycle is VOIDED (its delivery never reaches the cloud) and the
+    edge re-departs the same cycle at the repair time."""
+    t: float
+    edge: int
+    cycle: int
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeRepair:
+    """Edge ``edge`` comes back at time ``t`` and re-enters the loop."""
+    t: float
+    edge: int
+
+
+@dataclasses.dataclass(frozen=True)
 class CloudUpdate:
     """Cloud aggregation event at time ``t`` producing model ``version``.
 
@@ -83,7 +100,12 @@ class AsyncTimeline:
 
     ``trace`` interleaves ``("depart", Departure)`` / ``("update",
     CloudUpdate)`` records in exact occurrence order — the FL simulator
-    replays it verbatim (``repro.fl.sim`` mode="async").
+    replays it verbatim (``repro.fl.sim`` mode="async").  Under injected
+    outages (``simulate_async(outages=...)``) it additionally carries
+    ``("fail", EdgeFail)`` / ``("repair", EdgeRepair)`` records (clock
+    annotations: the voided cycle's delivery simply never appears; the
+    records are appended at void-detection, timestamps carry the true
+    fail/repair times).
     """
     num_edges: int
     rounds: int
@@ -94,6 +116,8 @@ class AsyncTimeline:
     trace: List[tuple]
     makespan: float                      # quota-filling update time - start
     start: float = 0.0
+    failures: List[EdgeFail] = dataclasses.field(default_factory=list)
+    repairs: List[EdgeRepair] = dataclasses.field(default_factory=list)
 
     # -- summary statistics -------------------------------------------------
 
@@ -151,7 +175,8 @@ class AsyncTimeline:
 
 
 def simulate_async(cycle_times, *, rounds: int, max_staleness: int,
-                   start: float = 0.0) -> AsyncTimeline:
+                   start: float = 0.0, outages=None,
+                   failover: bool = False) -> AsyncTimeline:
     """Run the event-driven timeline over per-edge cycle times.
 
     cycle_times: (M,) positive floats, one full edge cycle each
@@ -162,6 +187,24 @@ def simulate_async(cycle_times, *, rounds: int, max_staleness: int,
     rounds:      synchronous-equivalent cloud rounds; the engine stops after
                  ``rounds * M`` deliveries (equal communication work).
     max_staleness: SSP cycle-lead bound; 0 = exact synchronous barrier.
+    outages:     optional wall-clock edge-failure windows, a list of
+                 ``(edge, t_fail, t_repair)`` (``repro.core.faults``
+                 pre-samples them — the engine NEVER samples).  A cycle
+                 in flight when its edge's window opens is VOIDED: the
+                 engine emits ``("fail", EdgeFail)`` + ``("repair",
+                 EdgeRepair)`` trace records and re-departs the SAME
+                 cycle (same cost row) at the repair time; an idle edge
+                 inside a window just waits it out.  With no windows the
+                 trace is bit-identical to the window-free engine.
+    failover:    with outages, exclude edges that are DOWN (inside a
+                 window) from the staleness floor at gate-release time,
+                 so survivors keep progressing and fill the delivery
+                 quota instead of stalling behind the dead edge (the
+                 naive wait-for-all behavior is ``failover=False``).
+                 Requires ``max_staleness >= 1`` (the barrier has no
+                 floor to relax) and, since survivors may run extra
+                 cycles, more pre-sampled rows — the engine raises a
+                 clear error when the matrix runs dry.
     """
     cycle_times = np.asarray(cycle_times, dtype=float)
     if cycle_times.ndim not in (1, 2):
@@ -170,37 +213,104 @@ def simulate_async(cycle_times, *, rounds: int, max_staleness: int,
     M = cycle_times.shape[-1]
     if M == 0:
         raise ValueError("need at least one (active) edge")
+    if not np.all(np.isfinite(cycle_times)):
+        bad = np.argwhere(~np.isfinite(cycle_times))[:4].tolist()
+        raise ValueError(f"cycle_times must be finite; found NaN/inf at "
+                         f"indices {bad} (shape {cycle_times.shape})")
     if np.any(cycle_times <= 0):
-        raise ValueError("cycle times must be positive (drop inactive edges)")
+        bad = np.argwhere(cycle_times <= 0)[:4].tolist()
+        raise ValueError(f"cycle times must be positive (drop inactive "
+                         f"edges); found values <= 0 at indices {bad}")
     if rounds < 1 or max_staleness < 0:
         raise ValueError("rounds >= 1 and max_staleness >= 0 required")
     if cycle_times.ndim == 2 and cycle_times.shape[0] < rounds + max_staleness:
         raise ValueError(
             f"per-cycle matrix needs >= rounds + max_staleness = "
             f"{rounds + max_staleness} rows, got {cycle_times.shape[0]}")
+
+    # Per-edge outage windows, time-sorted (already non-overlapping when
+    # they come from faults.EdgeOutage.sample_windows).
+    win: List[List[Tuple[float, float]]] = [[] for _ in range(M)]
+    for m, f, r in (outages or []):
+        if not (0 <= int(m) < M):
+            raise ValueError(f"outage edge {m} out of range for M={M}")
+        if not (np.isfinite(f) and np.isfinite(r) and r > f):
+            raise ValueError(f"outage window ({f}, {r}) must be finite "
+                             f"with t_repair > t_fail")
+        win[int(m)].append((float(f), float(r)))
+    for w in win:
+        w.sort()
+    have_outages = any(win)
+    if failover and have_outages and max_staleness == 0:
+        raise ValueError("failover needs max_staleness >= 1 (the barrier "
+                         "has no staleness floor to relax); run the "
+                         "wait-for-all baseline at max_staleness=0 instead")
+
     if cycle_times.ndim == 2:
         def cost(m: int, c: int) -> float:
+            if c - 1 >= cycle_times.shape[0]:
+                raise ValueError(
+                    f"per-cycle matrix exhausted: edge {m} needs cycle "
+                    f"{c} but only {cycle_times.shape[0]} rows were "
+                    f"pre-sampled (outage failover makes survivors run "
+                    f"extra cycles — provide more rows)")
             return cycle_times[c - 1, m]
     else:
         def cost(m: int, c: int) -> float:
             return cycle_times[m]
 
+    def down_at(m: int, t: float):
+        """The window covering time ``t`` on edge ``m``, else None."""
+        for f, r in win[m]:
+            if f <= t < r:
+                return (f, r)
+            if f > t:
+                break
+        return None
+
     quota = rounds * M
     departures: List[Departure] = []
     updates: List[CloudUpdate] = []
+    failures: List[EdgeFail] = []
+    repairs: List[EdgeRepair] = []
     trace: List[tuple] = []
     heap: list = []                       # (arrival_t, edge, cycle)
     completed = np.zeros(M, dtype=np.int64)   # merged deliveries per edge
     dep_version = np.zeros(M, dtype=np.int64)
+    dep_time = np.zeros(M)
     version = 0
     delivered = 0
 
     def depart(m: int, cycle: int, t: float) -> None:
+        if win[m]:                        # idle edge waits an outage out
+            covering = down_at(m, t)
+            if covering is not None:
+                t = covering[1]
         d = Departure(t=t, edge=m, cycle=cycle, version=version)
         departures.append(d)
         trace.append(("depart", d))
         dep_version[m] = version
+        dep_time[m] = t
         heapq.heappush(heap, (t + cost(m, cycle), m, cycle))
+
+    def voided(m: int, c: int, t_arr: float) -> bool:
+        """If an outage opened mid-flight, void the cycle, record the
+        fail/repair events and re-depart the same cycle at repair."""
+        if not win[m]:
+            return False
+        for f, r in win[m]:
+            if dep_time[m] < f < t_arr:
+                ev_f = EdgeFail(t=f, edge=m, cycle=c)
+                ev_r = EdgeRepair(t=r, edge=m)
+                failures.append(ev_f)
+                repairs.append(ev_r)
+                trace.append(("fail", ev_f))
+                trace.append(("repair", ev_r))
+                depart(m, c, r)
+                return True
+            if f >= t_arr:
+                break
+        return False
 
     for m in range(M):
         depart(m, 1, start)
@@ -211,6 +321,8 @@ def simulate_async(cycle_times, *, rounds: int, max_staleness: int,
         pending: List[Tuple[float, int, int]] = []
         while heap and delivered < quota:
             t, m, c = heapq.heappop(heap)
+            if voided(m, c, t):
+                continue
             pending.append((t, m, c))
             if len(pending) < M:
                 continue
@@ -229,6 +341,8 @@ def simulate_async(cycle_times, *, rounds: int, max_staleness: int,
         gated: set = set()
         while heap and delivered < quota:
             t, m, c = heapq.heappop(heap)
+            if voided(m, c, t):
+                continue
             version += 1
             u = CloudUpdate(t=t, version=version,
                             merges=((m, c, int(version - 1 - dep_version[m])),))
@@ -239,7 +353,15 @@ def simulate_async(cycle_times, *, rounds: int, max_staleness: int,
             if delivered >= quota:
                 break
             gated.add(m)
-            floor = int(completed.min())
+            if failover and have_outages:
+                # Down edges don't drag the staleness floor: survivors
+                # keep progressing through the outage (failover), instead
+                # of everyone gating behind the dead edge.
+                up = np.array([down_at(mm, t) is None for mm in range(M)])
+                floor = int(completed[up].min()) if up.any() \
+                    else int(completed.min())
+            else:
+                floor = int(completed.min())
             for mm in sorted(gated):
                 if completed[mm] - floor <= max_staleness:
                     depart(mm, int(completed[mm]) + 1, t)
@@ -250,4 +372,4 @@ def simulate_async(cycle_times, *, rounds: int, max_staleness: int,
                          max_staleness=max_staleness,
                          cycle_times=cycle_times, departures=departures,
                          updates=updates, trace=trace, makespan=makespan,
-                         start=start)
+                         start=start, failures=failures, repairs=repairs)

@@ -1,0 +1,469 @@
+"""Fault injection + failure handling for the HFL delay model — BEYOND-PAPER.
+
+The paper's delay model (eqs. 1-5, 33-34) and the stochastic upgrade
+(``repro.core.stochastic``) assume every sampled delay eventually
+COMPLETES.  Real mobile-edge fleets do not: UEs churn in and out, eq. 4
+uploads are lost and retransmitted, edge servers go down and come back.
+This module makes those failures first-class — injectable, measurable,
+and HANDLED — while composing with any ``DelayModel`` and keeping its
+sampling discipline: one keyed, batched draw per run, no per-event
+Python on the hot path.
+
+Fault processes (each independently optional, each with an ``is_null()``
+fast path that guarantees zero-fault runs take the untouched PR 3/4 code
+paths event-for-event):
+
+* ``BernoulliDropout`` — iid per-cycle UE unavailability.
+* ``MarkovChurn``      — two-state (Gilbert) on/off churn with sticky
+  availability; stationary unavailability ``p_off / (p_off + p_on)``.
+* ``UplinkLoss``       — per-attempt loss of the eq. 4 upload; the
+  attempt count is geometric and drawn from ONE uniform per upload, and
+  each retransmission is charged into eq. 5 time plus capped exponential
+  backoff, so reliability costs show up in the makespan.
+* ``EdgeOutage``       — per-cycle edge-server failure with exponential
+  repair durations, materialized as wall-clock ``(edge, t_fail,
+  t_repair)`` windows for ``events.simulate_async``.
+
+Failure-handling policy (``FaultPolicy``):
+
+* ``wait_for_all``      — the naive baseline: no deadline, effectively
+  unbounded retries, outages stall the fleet in place.
+* ``deadline_failover`` — (1) a per-edge round deadline
+  ``D_m = deadline_factor * tau_m`` (deterministic eq. 33) cuts UEs that
+  miss it from the round via the existing zero-weight masking in
+  ``repro.fl.aggregate.flat_edge_aggregate``; optional over-selection
+  (``min_deliver_frac``) relaxes the deadline until a target fraction of
+  the available cohort delivers; (2) retries are capped at
+  ``max_retries`` retransmissions; (3) edge outages are survived by
+  FAILOVER — the event engine voids in-flight cycles and excludes down
+  edges from the staleness floor, and ``repro.core.assoc.failover``
+  re-associates the orphaned UEs to surviving edges.
+
+``faulty_cycle_stats`` is the single sampling entry point: it draws the
+delay ingredients through the composed ``DelayModel`` hooks and the
+fault processes under one key and returns per-cycle cycle times,
+survivor masks, delivered-weight fractions, outage windows and stall
+charges — everything ``repro.core.delay.faulty_async_completion`` and
+``repro.fl.sim`` need, with no further sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import delay
+from repro.core.problem import HFLProblem
+
+WAIT_FOR_ALL = "wait_for_all"
+DEADLINE_FAILOVER = "deadline_failover"
+
+_BACKOFF_EXP_CAP = 10       # caps the 2^k backoff growth (real stacks do)
+
+
+# ---------------------------------------------------------------------------
+# Fault processes.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BernoulliDropout:
+    """iid per-cycle UE unavailability: ``P(UE absent in a cycle) = rate``.
+
+    An absent UE skips the WHOLE cycle (all b edge rounds): it neither
+    trains nor uploads, and the edge round does not wait for it.
+    """
+    rate: float = 0.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"dropout rate must be in [0, 1], "
+                             f"got {self.rate}")
+
+    def is_null(self) -> bool:
+        return self.rate <= 0.0
+
+    def sample_available(self, key, num_cycles: int, num_ues: int):
+        """(C, N) bool availability — one batched draw."""
+        if self.is_null():
+            return jnp.ones((num_cycles, num_ues), bool)
+        u = jax.random.uniform(key, (num_cycles, num_ues))
+        return u >= self.rate
+
+
+@dataclasses.dataclass(frozen=True)
+class MarkovChurn:
+    """Two-state on/off churn: sticky availability (Gilbert model).
+
+    Per cycle an ON UE turns OFF with ``p_off`` and an OFF UE returns
+    with ``p_on``; the initial state is drawn from the stationary
+    distribution, so the long-run unavailability is
+    ``p_off / (p_off + p_on)``.  Unlike ``BernoulliDropout`` the outages
+    are CORRELATED across cycles — one churned UE is gone for
+    ``1/p_on`` cycles in expectation, the pattern that defeats
+    single-cycle over-selection.
+    """
+    p_off: float = 0.1
+    p_on: float = 0.5
+
+    def __post_init__(self):
+        if not (0.0 <= self.p_off <= 1.0 and 0.0 < self.p_on <= 1.0):
+            raise ValueError(f"need 0 <= p_off <= 1 and 0 < p_on <= 1, "
+                             f"got p_off={self.p_off}, p_on={self.p_on}")
+
+    def is_null(self) -> bool:
+        return self.p_off <= 0.0
+
+    def sample_available(self, key, num_cycles: int, num_ues: int):
+        """(C, N) bool availability — one scan over cycles, vectorized
+        over UEs (no per-event Python)."""
+        if self.is_null():
+            return jnp.ones((num_cycles, num_ues), bool)
+        k0, ku = jax.random.split(key)
+        pi_off = self.p_off / max(self.p_off + self.p_on, 1e-12)
+        state0 = jax.random.uniform(k0, (num_ues,)) >= pi_off
+        u = jax.random.uniform(ku, (num_cycles, num_ues))
+
+        def step(state, u_row):
+            nxt = jnp.where(state, u_row >= self.p_off, u_row < self.p_on)
+            return nxt, nxt
+
+        _, avail = jax.lax.scan(step, state0, u)
+        return avail
+
+
+@dataclasses.dataclass(frozen=True)
+class UplinkLoss:
+    """Per-attempt loss of the eq. 4 UE->edge upload, with backoff.
+
+    Each upload attempt is lost independently with probability ``rate``;
+    the number of attempts until success is geometric and drawn from ONE
+    uniform (``attempts = floor(log u / log rate) + 1``), so the whole
+    run needs a single batched draw.  Attempt ``k`` retransmits after an
+    exponential-backoff wait, so the total charged overhead of ``k``
+    attempts is ``(k - 1)`` extra eq. 5 transmissions plus
+    ``backoff * (2^(k-1) - 1)`` seconds of idle (growth capped at
+    ``2^10`` like real retry stacks).
+    """
+    rate: float = 0.0
+    backoff: float = 0.05
+
+    def __post_init__(self):
+        # rate=1 would mean NO upload ever succeeds (infinite attempts)
+        if not 0.0 <= self.rate < 1.0:
+            raise ValueError(f"loss rate must be in [0, 1), "
+                             f"got {self.rate}")
+        if self.backoff < 0:
+            raise ValueError("backoff must be >= 0")
+
+    def is_null(self) -> bool:
+        return self.rate <= 0.0
+
+    def sample_attempts(self, key, shape):
+        """Geometric attempt counts (>= 1), one uniform per upload."""
+        if self.is_null():
+            return jnp.ones(shape, jnp.int32)
+        u = jax.random.uniform(key, shape, minval=1e-12, maxval=1.0)
+        att = jnp.floor(jnp.log(u) / jnp.log(self.rate)) + 1.0
+        return att.astype(jnp.int32)
+
+    def total_backoff(self, attempts):
+        """Cumulative backoff idle charged before the successful attempt."""
+        k = jnp.clip(attempts.astype(jnp.float32) - 1.0, 0.0,
+                     float(_BACKOFF_EXP_CAP))
+        return self.backoff * (jnp.exp2(k) - 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeOutage:
+    """Edge-server outages: per-cycle failures with exponential repair.
+
+    Each cycle slot of each edge fails with probability ``rate``; the
+    failure strikes at a uniform phase inside the slot and the repair
+    lasts ``repair_cycles * Exp(1)`` deterministic cycle times.  Windows
+    are materialized ONCE per run as wall-clock ``(edge, t_fail,
+    t_repair)`` tuples (overlaps merged) — the event engine just
+    consults them, it never samples.
+    """
+    rate: float = 0.0
+    repair_cycles: float = 1.5
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"outage rate must be in [0, 1], "
+                             f"got {self.rate}")
+        if self.repair_cycles <= 0:
+            raise ValueError("repair_cycles must be > 0")
+
+    def is_null(self) -> bool:
+        return self.rate <= 0.0
+
+    def sample_windows(self, key, problem: HFLProblem, assoc, a, b,
+                       num_cycles: int) -> List[Tuple[int, float, float]]:
+        if self.is_null():
+            return []
+        det = delay.edge_cycle_time(problem, np.asarray(assoc), a, b)
+        kh, kp, kd = jax.random.split(key, 3)
+        C, M = int(num_cycles), problem.num_edges
+        hit = np.asarray(jax.random.uniform(kh, (C, M)) < self.rate)
+        phase = np.asarray(jax.random.uniform(kp, (C, M)))
+        dur = (np.asarray(jax.random.exponential(kd, (C, M))) *
+               self.repair_cycles)
+        windows: List[Tuple[int, float, float]] = []
+        for m in range(M):
+            if det[m] <= 0:
+                continue                            # inactive edge
+            merged: List[List[float]] = []
+            for c in np.flatnonzero(hit[:, m]):
+                f = float((c + phase[c, m]) * det[m])
+                r = f + float(dur[c, m] * det[m])
+                if merged and f <= merged[-1][1]:
+                    merged[-1][1] = max(merged[-1][1], r)
+                else:
+                    merged.append([f, r])
+            windows.extend((m, f, r) for f, r in merged)
+        return sorted(windows, key=lambda w: (w[1], w[0]))
+
+
+# ---------------------------------------------------------------------------
+# Fault model + handling policy.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Composition of the three fault processes (each optional).
+
+    ``is_null()`` is the parity guarantee: a null model routes every
+    consumer to the exact pre-fault code paths, so zero-fault runs are
+    event-for-event identical to the fault-free engine.
+    """
+    dropout: Optional[object] = None      # BernoulliDropout | MarkovChurn
+    loss: Optional[UplinkLoss] = None
+    outage: Optional[EdgeOutage] = None
+
+    def is_null(self) -> bool:
+        return all(p is None or p.is_null()
+                   for p in (self.dropout, self.loss, self.outage))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """How the protocol HANDLES the injected faults.
+
+    * ``name=WAIT_FOR_ALL`` — the naive baseline: infinite deadline,
+      effectively unbounded retries, outages stall the fleet in place
+      (their repair time is charged to the affected cycle).
+    * ``name=DEADLINE_FAILOVER`` (default) — per-edge round deadline
+      ``D_m = deadline_factor * tau_m`` (deterministic eq. 33), capped
+      retries, and edge failover (in-flight cycles voided, down edges
+      excluded from the staleness floor, orphans re-associated via
+      ``assoc.failover``).
+    * ``min_deliver_frac`` — over-selection: the deadline is relaxed per
+      EDGE ROUND until at least this fraction of the available cohort
+      makes that round, so churn + a tight deadline cannot starve an
+      edge.  (Cycle-level survivorship — all ``b`` rounds — can still be
+      lower, since each round's loss draws are independent.)
+    """
+    name: str = DEADLINE_FAILOVER
+    deadline_factor: float = float("inf")
+    max_retries: int = 10 ** 9
+    failover: bool = False
+    min_deliver_frac: float = 0.0
+
+    def __post_init__(self):
+        if self.name not in (WAIT_FOR_ALL, DEADLINE_FAILOVER):
+            raise ValueError(f"unknown fault policy {self.name!r}; expected "
+                             f"{WAIT_FOR_ALL!r} or {DEADLINE_FAILOVER!r}")
+        if self.deadline_factor <= 0:
+            raise ValueError("deadline_factor must be > 0")
+        if not 0.0 <= self.min_deliver_frac <= 1.0:
+            raise ValueError("min_deliver_frac must be in [0, 1]")
+
+
+def wait_for_all_policy() -> FaultPolicy:
+    """The naive baseline: wait forever, retry forever, stall on outage."""
+    return FaultPolicy(name=WAIT_FOR_ALL)
+
+
+def deadline_failover_policy(deadline_factor: float = 1.5,
+                             max_retries: int = 2,
+                             min_deliver_frac: float = 0.5) -> FaultPolicy:
+    """The failure-aware protocol with sane defaults."""
+    return FaultPolicy(name=DEADLINE_FAILOVER,
+                       deadline_factor=deadline_factor,
+                       max_retries=max_retries, failover=True,
+                       min_deliver_frac=min_deliver_frac)
+
+
+# ---------------------------------------------------------------------------
+# The one sampling entry point.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FaultyCycles:
+    """Everything one faulty run needs, sampled under one key.
+
+    * ``cycle_times``    — (C, M) policy-adjusted per-cycle times (the
+      deadline caps each round at ``D_m``; retries and backoff are
+      charged in).  Outage stalls are NOT included — ``stall`` carries
+      them for barrier-style consumers, the event engine re-derives them
+      from ``windows`` by voiding and re-running in-flight cycles.
+    * ``survivors``      — (C, N) bool: UE delivered every round of the
+      cycle (available, within the retry cap, within the deadline).
+    * ``delivered_frac`` — (C, M) delivered weight fraction per edge
+      (eq. 6/10 weights), 0 where nothing arrived.
+    * ``windows``        — wall-clock ``(edge, t_fail, t_repair)`` outage
+      windows for ``events.simulate_async``.
+    * ``down``           — (C, M) bool: edge's cycle slot intersects an
+      outage window (cycle-index view of ``windows``).
+    * ``stall``          — (C, M) repair time charged to the cycle whose
+      slot contains the failure (``wait_for_all`` barrier consumers add
+      this; failover consumers void + re-associate instead).
+    """
+    cycle_times: np.ndarray
+    survivors: np.ndarray
+    delivered_frac: np.ndarray
+    windows: List[Tuple[int, float, float]]
+    down: np.ndarray
+    stall: np.ndarray
+
+
+def faulty_cycle_stats(fault_model: FaultModel, policy: FaultPolicy, key,
+                       problem: HFLProblem, assoc, a, b, num_cycles: int,
+                       delay_model=None) -> FaultyCycles:
+    """Sample ``num_cycles`` fault-adjusted cycles in one batched draw.
+
+    Delay ingredients come from ``delay_model``'s hooks (default: the
+    paper's deterministic values), faults from ``fault_model``, handling
+    from ``policy`` — all under one key, so two policies evaluated at
+    the same key see the SAME draws (common random numbers: the
+    deadline policy's cycle times are pointwise <= wait-for-all's).
+    """
+    from repro.core import stochastic
+    if delay_model is None:
+        delay_model = stochastic.DelayModel()
+    A = np.asarray(assoc)
+    C, b = int(num_cycles), int(b)
+    N, M = problem.num_ues, problem.num_edges
+    key = stochastic.ensure_key(key)
+    kc, ku, kb, kd, kl, ko = jax.random.split(key, 6)
+
+    # -- ingredient draws (per-UE, per-round) -------------------------------
+    t_cmp = jnp.asarray(delay_model.sample_compute(kc, problem, C * b))
+    t_up = jnp.asarray(delay_model.sample_uplink(ku, problem, A, C * b))
+    t_mc = np.asarray(delay_model.sample_backhaul(kb, problem, C))
+
+    # -- fault draws --------------------------------------------------------
+    dropout = fault_model.dropout or BernoulliDropout(0.0)
+    loss = fault_model.loss or UplinkLoss(0.0)
+    outage = fault_model.outage or EdgeOutage(0.0)
+    avail = dropout.sample_available(kd, C, N)                  # (C, N)
+    attempts = loss.sample_attempts(kl, (C * b, N))             # (C*b, N)
+
+    max_attempts = int(policy.max_retries) + 1
+    att_eff = jnp.minimum(attempts, max_attempts)
+    ok_loss = (attempts <= max_attempts).reshape(C, b, N)
+
+    per_ue = (jnp.asarray(a, jnp.float32) * t_cmp +
+              att_eff.astype(jnp.float32) * t_up +
+              loss.total_backoff(att_eff)).reshape(C, b, N)
+
+    # -- deadline (eq. 33 capped at D_m) ------------------------------------
+    det_tau = delay.edge_round_time(problem, A, a)              # (M,)
+    gid = np.where(A.sum(1) > 0, A.argmax(1), M)                # overflow M
+    avail3 = avail[:, None, :]
+    wait_for_all = policy.name == WAIT_FOR_ALL
+    if wait_for_all and not dropout.is_null():
+        # The naive policy literally WAITS for churned-out UEs: an absent
+        # UE stalls its edge until it next comes back (the run length of
+        # its OFF streak, in deterministic cycle times), then delivers.
+        # The deadline policy cuts it instead — that asymmetry is the
+        # whole point of the comparison, and since the wait only ADDS
+        # time, the deadline policy's cycle times stay pointwise <= the
+        # naive ones under common random numbers.
+        avail_np = np.asarray(avail)
+        comeback = np.zeros((C, N))
+        run = np.ones(N)                  # OFF-streak length past horizon
+        for c in range(C - 1, -1, -1):
+            run = np.where(avail_np[c], 0.0, run + 1.0)
+            comeback[c] = run
+        det_cyc = delay.edge_cycle_time(problem, A, a, b)
+        cyc_of_ue = np.concatenate([det_cyc, [0.0]])[gid]       # (N,)
+        wait = comeback * cyc_of_ue[None, :] / max(b, 1)        # per round
+        per_ue = per_ue + jnp.asarray(wait[:, None, :], jnp.float32)
+        avail3 = jnp.ones_like(avail3)    # everyone (eventually) delivers
+    masked = jnp.where(avail3, per_ue, 0.0)
+    tau = stochastic._segment_max(masked.reshape(C * b, N), A)  # (C*b, M)
+    tau = np.asarray(tau).reshape(C, b, M)
+    deadline = np.where(np.isfinite(policy.deadline_factor),
+                        policy.deadline_factor * det_tau, np.inf)
+    if policy.min_deliver_frac > 0 and np.isfinite(deadline).any():
+        # Over-selection: never cut below the q-th fastest available
+        # member — relax D_m per round to that member's time.
+        q = float(policy.min_deliver_frac)
+        t_np = np.where(np.asarray(avail3), np.asarray(per_ue), np.nan)
+        floor_d = np.zeros((C, b, M))
+        import warnings
+        for m in range(M):
+            mem = np.flatnonzero(gid == m)
+            if mem.size == 0:
+                continue
+            tm = t_np[:, :, mem]                                # (C, b, |m|)
+            with warnings.catch_warnings():
+                # all-NaN slices (every member absent) resolve to 0.0
+                warnings.simplefilter("ignore", RuntimeWarning)
+                floor_d[:, :, m] = np.nan_to_num(
+                    np.nanquantile(tm, q, axis=2), nan=0.0)
+        D = np.maximum(deadline[None, None, :], floor_d)        # (C, b, M)
+    else:
+        D = np.broadcast_to(deadline[None, None, :], (C, b, M))
+    tau = np.minimum(tau, np.where(np.isfinite(D), D, np.inf))
+
+    per_ue_np = np.asarray(per_ue)
+    d_of_ue = np.take(np.concatenate([D, np.full((C, b, 1), np.inf)],
+                                     axis=2), gid, axis=2)      # (C, b, N)
+    delivered = (np.asarray(avail3) & np.asarray(ok_loss) &
+                 (per_ue_np <= d_of_ue) & (gid < M)[None, None, :])
+    survivors = delivered.all(axis=1)                           # (C, N)
+
+    active = A.sum(0) > 0
+    cycle_times = tau.sum(axis=1) + np.where(active, t_mc, 0.0)  # (C, M)
+
+    # -- outage windows + their cycle-index view ----------------------------
+    windows = outage.sample_windows(ko, problem, A, a, b, C)
+    down = np.zeros((C, M), dtype=bool)
+    stall = np.zeros((C, M))
+    det_cycle = delay.edge_cycle_time(problem, A, a, b)
+    for m, f, r in windows:
+        step = max(float(det_cycle[m]), 1e-12)
+        c0 = min(int(f // step), C - 1)
+        c1 = min(int(math.ceil(r / step)), C)
+        down[c0:max(c1, c0 + 1), m] = True
+        # Repair duration plus the voided in-flight work (the fraction of
+        # the cycle completed before the failure struck, which the naive
+        # baseline redoes after repair).
+        stall[c0, m] += (r - f) + (f - c0 * step)
+
+    # -- delivered weight fraction per edge ---------------------------------
+    w = np.asarray(problem.samples, float)
+    w_tot = np.zeros(M)
+    np.add.at(w_tot, gid[gid < M], w[gid < M])
+    w_surv = np.zeros((C, M))
+    src = survivors * w[None, :]
+    for m in range(M):
+        mem = np.flatnonzero(gid == m)
+        if mem.size:
+            w_surv[:, m] = src[:, mem].sum(axis=1)
+    delivered_frac = np.divide(w_surv, np.maximum(w_tot, 1e-12)[None, :],
+                               out=np.zeros_like(w_surv),
+                               where=w_tot[None, :] > 0)
+    return FaultyCycles(cycle_times=cycle_times,
+                        survivors=survivors,
+                        delivered_frac=delivered_frac,
+                        windows=windows, down=down, stall=stall)

@@ -281,12 +281,22 @@ class Compose(DelayModel):
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """A named stochastic workload: which distributions, stressing what."""
+    """A named stochastic workload: which distributions, stressing what.
+
+    ``faults`` (optional, a ``repro.core.faults.FaultModel``) adds a
+    failure process on top of the delay draws — consumers that only care
+    about delays (``model``) ignore it; the fault-aware paths
+    (``delay.faulty_async_completion``, ``benchmarks.bench_faults``)
+    pick it up.
+    """
     name: str
     model: DelayModel
     regime: str            # which paper regime the workload stresses
     description: str
+    faults: Optional[object] = None
 
+
+from repro.core import faults as _faults  # noqa: E402  (needs DelayModel)
 
 SCENARIOS: Dict[str, Scenario] = {
     s.name: s for s in (
@@ -330,17 +340,49 @@ SCENARIOS: Dict[str, Scenario] = {
                    "arXiv 2111.00637 'work' side)",
             description="Shifted-exponential compute with beta=3.0; "
                         "channel deterministic."),
+        Scenario(
+            name="ue_churn",
+            model=Compose(compute=LogNormalCompute(sigma=0.2)),
+            regime="intermittent client availability (arXiv 2111.00637 / "
+                   "2303.12414): edges lose and regain member UEs for "
+                   "whole cycles at a time",
+            faults=_faults.FaultModel(
+                dropout=_faults.MarkovChurn(p_off=0.15, p_on=0.45)),
+            description="Sticky Markov on/off churn (25% stationary "
+                        "unavailability, ~2.2-cycle outages) over mild "
+                        "compute jitter."),
+        Scenario(
+            name="edge_outage",
+            model=Compose(compute=LogNormalCompute(sigma=0.2)),
+            regime="edge-server failures: in-flight cycles voided, "
+                   "repair windows stall wait-for-all while failover "
+                   "keeps survivors progressing",
+            faults=_faults.FaultModel(
+                outage=_faults.EdgeOutage(rate=0.05, repair_cycles=6.0)),
+            description="Rare (5%/cycle) but LONG edge failures "
+                        "(exponential ~6-cycle repairs) over mild "
+                        "compute jitter — the regime where stalling in "
+                        "place loses to failover."),
+        Scenario(
+            name="lossy_uplink",
+            model=FadingChannel(rayleigh=True, shadowing_db=4.0),
+            faults=_faults.FaultModel(
+                loss=_faults.UplinkLoss(rate=0.25, backoff=0.05)),
+            regime="unreliable eq. 4 uploads: every lost attempt is "
+                   "re-charged into eq. 5 plus exponential backoff",
+            description="25% per-attempt upload loss with 50 ms base "
+                        "backoff over a fading channel."),
     )
 }
 
 
 def scenario(name: str) -> Scenario:
-    """Look up a named scenario; raises with the available names."""
+    """Look up a named scenario; raises ValueError with the names."""
     try:
         return SCENARIOS[name]
     except KeyError:
-        raise KeyError(f"unknown scenario {name!r}; available: "
-                       f"{sorted(SCENARIOS)}") from None
+        raise ValueError(f"unknown scenario {name!r}; registered scenarios: "
+                         f"{', '.join(sorted(SCENARIOS))}") from None
 
 
 def sample_cycle_times(model: DelayModel, key, problem: HFLProblem, assoc,

@@ -300,6 +300,33 @@ def flat_staleness_merge(global_vec, buf, eff_weights, w_total, *, mesh=None):
     return fn(g32, buf, eff_weights)
 
 
+def survivor_weights(weights, survivors, group_ids, num_groups: int):
+    """Renormalized survivor weights — the UNBIASED-mean masking rule
+    for fault-injected rounds (BEYOND-PAPER, ``repro.core.faults``).
+
+    Zeroing a dropped UE's weight already excludes it from the eq. 6
+    segment mean, but it also shrinks its edge's total mass, biasing any
+    downstream weighting that uses raw masses.  This rescales each
+    edge's SURVIVING weights so the edge's total mass is preserved:
+
+        w'_n = w_n * survivor_n * (W_m / W_m^surv),   n in edge m
+
+    An edge with NO survivors keeps all-zero weights — combined with the
+    zero-weight guard in ``flat_edge_aggregate`` (``max(gw, 1e-12)``) a
+    fully-dropped cohort contributes an exact 0, never a NaN, on both
+    the jnp and the Pallas kernel paths.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    s = jnp.asarray(survivors)
+    gids = jnp.asarray(group_ids, jnp.int32)
+    ng = int(num_groups)
+    masked = w * s.astype(jnp.float32)
+    w_full = jax.ops.segment_sum(w, gids, num_segments=ng)
+    w_surv = jax.ops.segment_sum(masked, gids, num_segments=ng)
+    scale = jnp.where(w_surv > 0, w_full / jnp.maximum(w_surv, 1e-12), 0.0)
+    return masked * scale[gids]
+
+
 # ---------------------------------------------------------------------------
 # Stacked-pytree API (ravels through the flat buffer).
 # ---------------------------------------------------------------------------

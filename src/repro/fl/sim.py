@@ -55,7 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
-from repro.core import delay
+from repro.core import delay, faults
 from repro.core.schedule import HFLSchedule
 from repro.fl import aggregate, clients
 from repro.fl.flatten import FlatLayout, ShardedFlatLayout
@@ -84,7 +84,8 @@ class HFLSimulator:
                  samples_per_ue: Optional[int] = None, seed: int = 0,
                  mesh=None, mode: str = "sync", max_staleness: int = 0,
                  staleness_decay: float = 0.9, delay_model=None,
-                 delay_seed: int = 0):
+                 delay_seed: int = 0, fault_model=None, fault_policy=None,
+                 fault_seed: int = 0):
         """``delay_model`` (a ``repro.core.stochastic.DelayModel``) makes
         the CLOCK stochastic in both modes: sync rounds cost that round's
         ``max_m`` cycle draw instead of the constant eq. 34 ``T``, async
@@ -93,7 +94,22 @@ class HFLSimulator:
         ``DeterministicDelays()`` — or the default ``None`` — reproduces
         the constant-delay behavior exactly.  The MODEL trajectory only
         depends on the event order, so under ``DeterministicDelays`` it
-        is unchanged too."""
+        is unchanged too.
+
+        ``fault_model`` (a ``repro.core.faults.FaultModel``, BEYOND-PAPER)
+        injects UE dropout / uplink loss / edge outages into both the
+        clock and the MODEL: rounds (sync) or departure cycles (async)
+        aggregate only the cycle's SURVIVORS with per-edge-mass-preserving
+        renormalized weights (``aggregate.survivor_weights``), a
+        fully-dropped cohort contributes zero (never NaN) to the cloud
+        mean, and the clock pays the policy's price — deadline cuts /
+        capped retries / failover under ``deadline_failover_policy()``
+        (the default), comeback-waits / unbounded retries / repair stalls
+        under ``wait_for_all_policy()``.  A null fault model (``None`` or
+        ``is_null()``) takes the exact legacy code paths, so all parity
+        guarantees above are untouched.  ``fault_seed`` keys the fault
+        draws (which subsume the delay draws in fault runs — see
+        ``core.faults.faulty_cycle_stats``)."""
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
         if mode == "async" and solver != "gd":
@@ -104,6 +120,20 @@ class HFLSimulator:
         if delay_model is not None and schedule.problem is None:
             raise ValueError("delay_model= needs schedule.problem to sample "
                              "the delay ingredients (eqs. 1-5, 8)")
+        if fault_model is not None and fault_model.is_null():
+            fault_model = None           # exact legacy paths (parity)
+        if fault_model is not None:
+            if schedule.problem is None:
+                raise ValueError("fault_model= needs schedule.problem to "
+                                 "price retries/deadlines (eqs. 1-5, 33)")
+            if solver != "gd":
+                raise ValueError("fault_model= supports solver='gd' only "
+                                 "(DANE's global gradient assumes every UE "
+                                 "reports; survivor masking breaks it)")
+        self.fault_model = fault_model
+        self.fault_policy = (fault_policy if fault_policy is not None
+                             else faults.deadline_failover_policy())
+        self.fault_seed = int(fault_seed)
         self.delay_model = delay_model
         self.delay_seed = int(delay_seed)
         self.schedule = schedule
@@ -168,6 +198,9 @@ class HFLSimulator:
         self._cloud_round = self._build_cloud_round()
         if mode == "async":
             self._depart_cycle, self._merge = self._build_async_ops()
+        if fault_model is not None:
+            (self._faulty_cloud_round,
+             self._faulty_depart) = self._build_faulty_ops()
         # Weight-averaged train loss over ALL UEs (one vmap'd loss).
         self._train_loss = jax.jit(
             lambda gp, batches, w: jnp.sum(
@@ -283,6 +316,86 @@ class HFLSimulator:
         donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
         return (jax.jit(depart_cycle, donate_argnums=donate), jax.jit(merge))
 
+    def _build_faulty_ops(self):
+        """Fault-aware twins of the hot-loop closures (``fault_model=``).
+
+        Kept SEPARATE from ``_cloud_round`` / ``_depart_cycle`` so the
+        fault-free paths stay byte-identical (the parity guarantees of the
+        sync/async/stochastic layers never route through this code):
+
+        * ``faulty_cloud_round(flat, batches, w_edge, w_cloud)`` — one
+          sync round where the b edge aggregations use the round's
+          survivor-renormalized weights and the cloud mean reweights to
+          the edges that actually delivered (a dead cohort's zero rows
+          carry zero cloud weight — the global model stays the unbiased
+          mean of survivors).
+        * ``faulty_depart(flat, g, batches, mask, w_edge)`` — the async
+          departure wave with the wave's survivor weights; non-departing
+          groups' weights are irrelevant (their rows are discarded by
+          ``mask``).
+
+        Both take the weights as RUNTIME arguments: one compilation
+        serves every fault pattern.
+        """
+        a, b = self.schedule.a, self.schedule.b
+        M = self.schedule.num_edges
+        loss_fn, lr = self.loss_fn, self.lr
+        group_ids = self._hot_gids
+        mesh = self.mesh
+        if self._slayout is not None:
+            unravel, ravel = (self._slayout.unravel_padded,
+                              self._slayout.ravel_padded)
+        else:
+            unravel, ravel = self._layout.unravel, self._layout.ravel
+        local_gd = clients.gd_local_steps(loss_fn, a, lr)
+
+        def faulty_cloud_round(flat, batches, w_edge, w_cloud):
+            def edge_round(_, buf):
+                p = jax.vmap(local_gd)(unravel(buf), batches)
+                return aggregate.flat_edge_aggregate(
+                    ravel(p), w_edge, group_ids, M, mesh=mesh)
+
+            flat = jax.lax.fori_loop(0, b, edge_round, flat)
+            return aggregate.flat_cloud_aggregate(flat, w_cloud, mesh=mesh)
+
+        def faulty_depart(flat, g, batches, mask, w_edge):
+            seeded = jnp.where(mask[:, None], g[None, :], flat)
+
+            def edge_round(_, buf):
+                p = jax.vmap(local_gd)(unravel(buf), batches)
+                return aggregate.flat_edge_aggregate(
+                    ravel(p), w_edge, group_ids, M, mesh=mesh)
+
+            new = jax.lax.fori_loop(0, b, edge_round, seeded)
+            return jnp.where(mask[:, None], new, flat)
+
+        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        return (jax.jit(faulty_cloud_round, donate_argnums=donate),
+                jax.jit(faulty_depart, donate_argnums=donate))
+
+    def _fault_survivor_matrix(self, fc):
+        """``fc.survivors`` mapped onto the HOT row layout: (C, N_hot)
+        bool (padding rows are row-0 copies, but they carry zero weight
+        everywhere it matters)."""
+        surv = np.asarray(fc.survivors)
+        if self._slayout is not None:
+            surv = np.asarray(self._slayout.pad_rows(
+                jnp.asarray(surv.T))).T
+        return surv
+
+    def _fault_round_weights(self, ue_ok):
+        """(w_edge, w_cloud) for one round/wave from the hot-row survivor
+        mask: survivor-renormalized edge weights + cloud weights zeroing
+        edges with no surviving mass."""
+        M = self.schedule.num_edges
+        w_edge = aggregate.survivor_weights(
+            self._hot_weights, jnp.asarray(ue_ok), self._hot_gids, M)
+        mass = jax.ops.segment_sum(
+            jnp.asarray(self._hot_weights) * jnp.asarray(ue_ok, jnp.float32),
+            self._hot_gids, num_segments=M)
+        w_cloud = jnp.asarray(self._hot_weights) * (mass > 0)[self._hot_gids]
+        return w_edge, w_cloud
+
     def global_params(self):
         """The cloud model: weighted mean over UE replicas (eq. 10)."""
         w = self._hot_weights / jnp.sum(self._hot_weights)
@@ -300,6 +413,9 @@ class HFLSimulator:
             return self._run_async(test_batch, rounds, eval_every, verbose)
         sched = self.schedule
         rounds = rounds or sched.rounds
+        if self.fault_model is not None:
+            return self._run_sync_faulty(test_batch, rounds, eval_every,
+                                         verbose)
         if self.delay_model is not None:
             # One batched draw for the whole run: round r costs the max
             # over edges of that round's cycle draw (stochastic eq. 34).
@@ -331,6 +447,65 @@ class HFLSimulator:
                          train_loss=np.array(trlosses),
                          schedule=sched, final_params=self.global_params())
 
+    def _run_sync_faulty(self, test_batch: dict, rounds: int,
+                         eval_every: int, verbose: bool) -> SimResult:
+        """Synchronous rounds under an injected fault process.
+
+        One keyed batched draw (``faults.faulty_cycle_stats``) prices the
+        whole run; round ``r`` then
+
+        * COSTS the policy's makespan — wait-for-all pays every straggler
+          (comeback waits, unbounded retries, outage stalls) so the round
+          is ``max_m`` of the stalled cycle times; deadline policies cut
+          at ``D_m`` and skip edges inside an outage window;
+        * AGGREGATES only round ``r``'s survivors: edge means use
+          survivor-renormalized weights, the cloud mean zeroes edges with
+          no delivered mass (down, or fully-dropped cohort).
+        """
+        sched = self.schedule
+        policy = self.fault_policy
+        fc = faults.faulty_cycle_stats(
+            self.fault_model, policy, self.fault_seed, sched.problem,
+            sched.assoc, sched.a, sched.b, rounds,
+            delay_model=self.delay_model)
+        ct = np.asarray(fc.cycle_times)
+        down = np.asarray(fc.down)
+        if policy.name == faults.WAIT_FOR_ALL:
+            round_times = (ct + np.asarray(fc.stall)).max(axis=1)
+        else:
+            round_times = np.where(down, 0.0, ct).max(axis=1)
+        surv = self._fault_survivor_matrix(fc)
+        gids = np.asarray(self._hot_gids)
+
+        times, accs, tlosses, trlosses = [], [], [], []
+        clock = 0.0
+        test_batch = jax.tree.map(jnp.asarray, test_batch)
+        for r in range(rounds):
+            ue_ok = surv[r] & ~down[r][gids]
+            if ue_ok.any():
+                w_edge, w_cloud = self._fault_round_weights(ue_ok)
+                self._flat = self._faulty_cloud_round(
+                    self._flat, self._hot_batches, w_edge, w_cloud)
+            # else: nothing delivered — the round is wasted wall-clock,
+            # the model stays put (no division by a zero weight mass).
+            clock += float(round_times[r])
+            if (r + 1) % eval_every == 0 or r == rounds - 1:
+                gp = self.global_params()
+                loss, mets = self.loss_fn(gp, test_batch)
+                trl = self._train_loss(gp, self.batches, self.weights)
+                times.append(clock)
+                accs.append(float(mets.get("acc", jnp.nan)))
+                tlosses.append(float(loss))
+                trlosses.append(float(trl))
+                if verbose:
+                    print(f"round {r+1:3d}/{rounds}  t={clock:9.2f}s  "
+                          f"acc={accs[-1]:.4f}  loss={tlosses[-1]:.4f}  "
+                          f"survivors={int(ue_ok.sum())}")
+        return SimResult(times=np.array(times), test_acc=np.array(accs),
+                         test_loss=np.array(tlosses),
+                         train_loss=np.array(trlosses),
+                         schedule=sched, final_params=self.global_params())
+
     def _run_async(self, test_batch: dict, rounds: Optional[int],
                    eval_every: int, verbose: bool) -> SimResult:
         """Replay the event-driven async timeline (see module docstring).
@@ -347,11 +522,19 @@ class HFLSimulator:
             raise ValueError("mode='async' needs schedule.problem to derive "
                              "per-edge cycle times (eqs. 8/33)")
         rounds = rounds or sched.rounds
-        stats = delay.async_completion(sched.problem, sched.assoc, sched.a,
-                                       sched.b, rounds=rounds,
-                                       max_staleness=self.max_staleness,
-                                       delay_model=self.delay_model,
-                                       key=self.delay_seed)
+        if self.fault_model is not None:
+            stats = delay.faulty_async_completion(
+                sched.problem, sched.assoc, sched.a, sched.b, rounds=rounds,
+                max_staleness=self.max_staleness,
+                fault_model=self.fault_model, policy=self.fault_policy,
+                delay_model=self.delay_model, key=self.fault_seed)
+            surv = self._fault_survivor_matrix(stats["cycle_stats"])
+        else:
+            stats = delay.async_completion(
+                sched.problem, sched.assoc, sched.a, sched.b, rounds=rounds,
+                max_staleness=self.max_staleness,
+                delay_model=self.delay_model, key=self.delay_seed)
+            surv = None
         tl = stats["timeline"]
         active = np.asarray(stats["active_edges"])
         gids = np.asarray(self._hot_gids)
@@ -369,22 +552,50 @@ class HFLSimulator:
 
         num_updates = len(tl.updates)
         pending = np.zeros(gids.shape[0], dtype=bool)
+        # Per-hot-row survivor flags of each row's LAST departed cycle
+        # (fault runs): departures stamp them, the flush renormalizes the
+        # wave's edge weights to them, merges zero out dead cohorts.
+        pending_ok = np.ones(gids.shape[0], dtype=bool)
+        last_cycle = np.zeros(sched.num_edges, dtype=np.int64)
         times, accs, tlosses, trlosses = [], [], [], []
         updates_seen = 0
         for kind, ev in tl.trace:
             if kind == "depart":
-                pending |= gids == int(active[ev.edge])
+                cohort = gids == int(active[ev.edge])
+                pending |= cohort
+                if surv is not None:
+                    row = min(ev.cycle - 1, surv.shape[0] - 1)
+                    pending_ok[cohort] = surv[row, cohort]
+                    last_cycle[int(active[ev.edge])] = row
                 continue
+            if kind in ("fail", "repair"):
+                continue         # clock annotations only (cycle voided in
+                                 # the trace: its delivery never appears)
             if pending.any():
                 # jnp.asarray may alias the numpy buffer (zero-copy on CPU)
                 # and dispatch is async, so hand over the buffer and start a
                 # fresh one instead of mutating it in place.
-                self._flat = self._depart_cycle(
-                    self._flat, g, self._hot_batches, jnp.asarray(pending))
+                if surv is not None:
+                    ue_ok = np.where(pending, pending_ok, True)
+                    w_edge, _ = self._fault_round_weights(ue_ok)
+                    self._flat = self._faulty_depart(
+                        self._flat, g, self._hot_batches,
+                        jnp.asarray(pending), w_edge)
+                else:
+                    self._flat = self._depart_cycle(
+                        self._flat, g, self._hot_batches,
+                        jnp.asarray(pending))
                 pending = np.zeros_like(pending)
             decay = np.zeros(sched.num_edges)
             for e, _, s in ev.merges:
-                decay[active[e]] = self.staleness_decay ** s
+                m_full = int(active[e])
+                ok = 1.0
+                if surv is not None:
+                    cohort = gids == m_full
+                    mass = (weights_np[cohort] *
+                            surv[last_cycle[m_full], cohort]).sum()
+                    ok = float(mass > 0)  # dead cohort: zero rows, no merge
+                decay[m_full] = ok * self.staleness_decay ** s
             eff = jnp.asarray(weights_np * decay[gids], jnp.float32)
             g = self._merge(g, self._flat, eff)
             updates_seen += 1

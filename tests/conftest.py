@@ -14,3 +14,16 @@ try:
     import hypothesis  # noqa: F401
 except ImportError:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_shims"))
+
+
+def pytest_collection_modifyitems(config, items):
+    # Per-test wall-clock ceiling so one hung simulation (an event-engine
+    # regression, a deadlocked subprocess) fails fast instead of eating
+    # the CI job's 40-minute budget.  Gated on the pytest-timeout plugin
+    # (requirements-dev.txt) so a bare `pytest` without it still runs.
+    if not config.pluginmanager.hasplugin("timeout"):
+        return
+    import pytest
+    for item in items:
+        if item.get_closest_marker("timeout") is None:
+            item.add_marker(pytest.mark.timeout(300))

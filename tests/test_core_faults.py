@@ -1,0 +1,354 @@
+"""Fault-injection engine (``repro.core.faults``) + failure-aware paths.
+
+Covered: keyed batched sampling of the three fault processes, CRN policy
+dominance (deadline cycle times never exceed wait-for-all on the same
+key), capped-retry/backoff pricing, outage voiding + failover in the
+event engine (incl. zero-outage trace parity), the incremental
+``assoc.failover`` re-association, and the FL simulator's survivor
+semantics (null-fault parity, finiteness, policy clock ordering).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import assoc as assoc_lib
+from repro.core import delay, events, faults, stochastic
+from repro.core.problem import HFLProblem
+
+
+@pytest.fixture(scope="module")
+def prob_assoc():
+    prob = HFLProblem(num_edges=3, num_ues=12, seed=0)
+    return prob, assoc_lib.proposed(prob)
+
+
+# -- sampling -----------------------------------------------------------
+
+
+def test_bernoulli_dropout_rate_and_determinism():
+    d = faults.BernoulliDropout(rate=0.3)
+    av1 = np.asarray(d.sample_available(jax.random.PRNGKey(0), 200, 50))
+    av2 = np.asarray(d.sample_available(jax.random.PRNGKey(0), 200, 50))
+    np.testing.assert_array_equal(av1, av2)
+    assert abs(1.0 - av1.mean() - 0.3) < 0.02
+    assert np.asarray(
+        faults.BernoulliDropout(rate=0.0).sample_available(
+            jax.random.PRNGKey(0), 4, 5)).all()
+
+
+def test_markov_churn_stationary_and_bursty():
+    c = faults.MarkovChurn(p_off=0.1, p_on=0.4)
+    av = np.asarray(c.sample_available(jax.random.PRNGKey(1), 400, 64))
+    pi_on = 0.4 / (0.1 + 0.4)
+    assert abs(av.mean() - pi_on) < 0.03   # stationary start, no burn-in
+    # burstiness: OFF states chain (P[off | off] = 1 - p_on > pi_off)
+    off = ~av
+    both = (off[:-1] & off[1:]).sum() / max(off[:-1].sum(), 1)
+    assert both > off.mean() + 0.1
+
+
+def test_uplink_loss_geometric_attempts_and_backoff():
+    ul = faults.UplinkLoss(rate=0.25, backoff=0.1)
+    att = np.asarray(ul.sample_attempts(jax.random.PRNGKey(2), (5000,)))
+    assert att.min() >= 1
+    assert abs(att.mean() - 1 / (1 - 0.25)) < 0.05   # E[geom] = 1/(1-p)
+    # backoff: 0 extra for first-try success, exponential after
+    back = np.asarray(ul.total_backoff(att))
+    assert np.all(back[att == 1] == 0)
+    assert np.all(back[att == 2] == pytest.approx(0.1))
+    assert np.all(back[att == 3] == pytest.approx(0.3))
+    # the exponent cap keeps even absurd retry counts finite
+    assert np.isfinite(np.asarray(ul.total_backoff(np.array([1000]))))[0]
+
+
+def test_edge_outage_windows_sorted_disjoint(prob_assoc):
+    prob, A = prob_assoc
+    out = faults.EdgeOutage(rate=0.3, repair_cycles=2.0)
+    wins = out.sample_windows(jax.random.PRNGKey(3), prob, A, 8, 3, 12)
+    assert wins, "30%/cycle over 12 cycles should produce windows"
+    per_edge: dict = {}
+    for m, f, r in wins:
+        assert 0 <= m < prob.num_edges and r > f >= 0
+        per_edge.setdefault(m, []).append((f, r))
+    for spans in per_edge.values():
+        for (f1, r1), (f2, r2) in zip(spans, spans[1:]):
+            assert f2 > r1, "windows must be merged/disjoint per edge"
+    fails = [f for _, f, _ in wins]
+    assert fails == sorted(fails), "windows must be wall-clock sorted"
+
+
+# -- policy pricing (CRN) ----------------------------------------------
+
+
+def test_deadline_cycle_times_dominated_by_wait_for_all(prob_assoc):
+    """Same key, same draws: the deadline policy can only CUT work, so
+    its cycle times are pointwise <= the wait-for-all ones."""
+    prob, A = prob_assoc
+    fm = faults.FaultModel(dropout=faults.MarkovChurn(p_off=0.2, p_on=0.4),
+                           loss=faults.UplinkLoss(rate=0.3))
+    wfa = faults.faulty_cycle_stats(fm, faults.wait_for_all_policy(), 5,
+                                    prob, A, 8, 3, 10)
+    dlf = faults.faulty_cycle_stats(fm, faults.deadline_failover_policy(),
+                                    5, prob, A, 8, 3, 10)
+    cw, cd = np.asarray(wfa.cycle_times), np.asarray(dlf.cycle_times)
+    assert np.all(cd <= cw + 1e-9)
+    assert cw.sum() > cd.sum()           # churn + loss must actually bite
+    # wait-for-all never drops anyone; the deadline policy does
+    assert np.asarray(wfa.survivors).all()
+    assert not np.asarray(dlf.survivors).all()
+    # determinism: same key reproduces bit-identically
+    again = faults.faulty_cycle_stats(fm, faults.wait_for_all_policy(), 5,
+                                      prob, A, 8, 3, 10)
+    np.testing.assert_array_equal(cw, np.asarray(again.cycle_times))
+
+
+def test_null_fault_model_reproduces_stochastic_draws(prob_assoc):
+    """All fault rates zero: cycle times equal the plain stochastic (or
+    deterministic) sampler's draws — the fault layer adds nothing."""
+    prob, A = prob_assoc
+    fm = faults.FaultModel()
+    assert fm.is_null()
+    fc = faults.faulty_cycle_stats(fm, faults.wait_for_all_policy(), 0,
+                                   prob, A, 8, 3, 6)
+    det = delay.edge_cycle_time(prob, A, 8, 3)
+    np.testing.assert_allclose(np.asarray(fc.cycle_times),
+                               np.tile(det, (6, 1)), rtol=1e-5)
+    assert np.asarray(fc.survivors).all() and not fc.windows
+
+
+def test_min_deliver_frac_over_selection(prob_assoc):
+    """Over-selection relaxes a tight deadline per edge round: under the
+    same draws the floored policy delivers pointwise at least as much as
+    the bare deadline, and substantially more in aggregate."""
+    prob, A = prob_assoc
+    fm = faults.FaultModel(loss=faults.UplinkLoss(rate=0.6))
+    bare = faults.FaultPolicy(name=faults.DEADLINE_FAILOVER,
+                              deadline_factor=1.01, max_retries=9)
+    floored = faults.FaultPolicy(name=faults.DEADLINE_FAILOVER,
+                                 deadline_factor=1.01, max_retries=9,
+                                 min_deliver_frac=0.7)
+    fb = faults.faulty_cycle_stats(fm, bare, 7, prob, A, 8, 3, 8)
+    ff = faults.faulty_cycle_stats(fm, floored, 7, prob, A, 8, 3, 8)
+    db, df = np.asarray(fb.delivered_frac), np.asarray(ff.delivered_frac)
+    assert np.all(df >= db - 1e-9)
+    assert df.mean() > db.mean() + 0.05
+    # the relaxed deadline costs time: cycle times may only grow
+    assert np.all(np.asarray(ff.cycle_times) >=
+                  np.asarray(fb.cycle_times) - 1e-9)
+
+
+def test_fault_policy_validation():
+    with pytest.raises(ValueError):
+        faults.FaultPolicy(name="bogus")
+    with pytest.raises(ValueError):
+        faults.FaultPolicy(deadline_factor=0.0)
+    with pytest.raises(ValueError):
+        faults.FaultPolicy(min_deliver_frac=1.5)
+    with pytest.raises(ValueError):
+        faults.BernoulliDropout(rate=1.5)
+    with pytest.raises(ValueError):
+        faults.UplinkLoss(rate=1.0)
+
+
+# -- event engine: outages, voiding, failover ---------------------------
+
+
+def test_engine_outage_voids_and_stalls():
+    ct = np.array([2.0, 5.0])
+    clean = events.simulate_async(ct, rounds=3, max_staleness=0)
+    # edge 0 fails at t=1 (cycle 1 in flight), repaired at t=9: the
+    # cycle is VOIDED and re-departed at the repair time
+    tl = events.simulate_async(ct, rounds=3, max_staleness=0,
+                               outages=[(0, 1.0, 9.0)])
+    assert len(tl.failures) == 1 and len(tl.repairs) == 1
+    f, r = tl.failures[0], tl.repairs[0]
+    assert f.edge == 0 and f.t == 1.0 and r.t == 9.0 and f.cycle == 1
+    assert tl.makespan > clean.makespan     # voided work + repair stall
+    kinds = [k for k, _ in tl.trace]
+    assert "fail" in kinds and "repair" in kinds
+    # the voided delivery never reaches the cloud: quota still exact
+    assert sum(len(u.merges) for u in tl.updates) == 3 * 2
+
+
+def test_engine_zero_outage_trace_parity():
+    rng = np.random.default_rng(0)
+    ct = rng.uniform(1, 3, size=(12, 3))
+    a = events.simulate_async(ct, rounds=4, max_staleness=2)
+    b = events.simulate_async(ct, rounds=4, max_staleness=2, outages=[],
+                              failover=True)
+    assert a.trace == b.trace and a.makespan == b.makespan
+
+
+def test_engine_failover_beats_stall():
+    """With one edge down for a LONG repair, relaxing the staleness floor
+    to the surviving edges (failover=True) finishes strictly earlier."""
+    ct = np.array([2.0, 2.0, 2.0])
+    out = [(1, 1.0, 40.0)]
+    stall = events.simulate_async(ct, rounds=4, max_staleness=1,
+                                  outages=out, failover=False)
+    fo = events.simulate_async(ct, rounds=4, max_staleness=1, outages=out,
+                               failover=True)
+    assert fo.makespan < stall.makespan
+    assert len(fo.failures) == 1
+
+
+def test_engine_validates_inputs():
+    with pytest.raises(ValueError, match="finite"):
+        events.simulate_async(np.array([1.0, np.nan]), rounds=2,
+                              max_staleness=0)
+    with pytest.raises(ValueError, match="positive"):
+        events.simulate_async(np.array([1.0, -2.0]), rounds=2,
+                              max_staleness=0)
+    with pytest.raises(ValueError, match="rows"):
+        events.simulate_async(np.ones((2, 3)), rounds=4, max_staleness=1)
+    with pytest.raises(ValueError, match="out of range"):
+        events.simulate_async(np.ones(2), rounds=2, max_staleness=0,
+                              outages=[(5, 1.0, 2.0)])
+    with pytest.raises(ValueError, match="max_staleness >= 1"):
+        events.simulate_async(np.ones(2), rounds=2, max_staleness=0,
+                              outages=[(0, 1.0, 2.0)], failover=True)
+
+
+# -- incremental failover association -----------------------------------
+
+
+def test_assoc_failover_moves_orphans(prob_assoc):
+    prob, A = prob_assoc
+    dead = [int(np.asarray(A).sum(0).argmax())]   # kill the busiest edge
+    A2 = assoc_lib.failover(prob, A, dead, a=8.0)
+    A2 = np.asarray(A2)
+    assert A2[:, dead[0]].sum() == 0
+    assert A2.sum() == np.asarray(A).sum()        # nobody lost
+    np.testing.assert_array_equal(A2.sum(1), np.asarray(A).sum(1))
+    # untouched UEs keep their edge
+    keep = np.asarray(A)[:, dead[0]] == 0
+    np.testing.assert_array_equal(A2[keep], np.asarray(A)[keep])
+    with pytest.raises(ValueError):
+        assoc_lib.failover(prob, A, list(range(prob.num_edges)))
+
+
+# -- end-to-end policy comparison ---------------------------------------
+
+
+@pytest.mark.slow
+def test_fault_scenarios_deadline_beats_wait_for_all():
+    """The PR's headline: on every registered fault scenario the
+    failure-aware policy wins at p50 AND p95 under common random
+    numbers (small-trial version of benchmarks/bench_faults, same
+    fleet geometry)."""
+    prob = HFLProblem(num_edges=4, num_ues=24, seed=0)
+    A = assoc_lib.proposed(prob)
+    for name in ("ue_churn", "edge_outage", "lossy_uplink"):
+        scen = stochastic.scenario(name)
+        d = delay.fault_makespan_distribution(
+            prob, A, 8, 9, rounds=4, max_staleness=1,
+            fault_model=scen.faults,
+            policies={"wfa": faults.wait_for_all_policy(),
+                      "dlf": faults.deadline_failover_policy()},
+            delay_model=scen.model, key=0, num_trials=8)
+        assert d["dlf_p50"] < d["wfa_p50"], name
+        assert d["dlf_p95"] < d["wfa_p95"], name
+
+
+def test_faulty_async_completion_null_parity(prob_assoc):
+    """Zero fault rates: the fault-aware completion call reproduces the
+    plain async timeline event for event."""
+    prob, A = prob_assoc
+    base = delay.async_completion(prob, A, 8, 3, rounds=4, max_staleness=1)
+    fa = delay.faulty_async_completion(
+        prob, A, 8, 3, rounds=4, max_staleness=1,
+        fault_model=faults.FaultModel(),
+        policy=faults.deadline_failover_policy(), key=0)
+    assert np.isclose(fa["makespan"], base["makespan"], rtol=1e-5)
+    assert len(fa["timeline"].trace) == len(base["timeline"].trace)
+    for (k1, e1), (k2, e2) in zip(fa["timeline"].trace,
+                                  base["timeline"].trace):
+        assert k1 == k2 and e1.t == pytest.approx(e2.t, rel=1e-5)
+
+
+# -- FL simulator integration -------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fl_setup():
+    import jax
+
+    from repro.core import schedule
+    from repro.data import partition, synthetic
+    from repro.models import lenet
+
+    prob = HFLProblem(num_edges=3, num_ues=12, epsilon=0.25, seed=0,
+                      samples_lo=50, samples_hi=120)
+    sch = schedule.plan(prob)
+    n = int(prob.samples.sum())
+    train = synthetic.logreg_data(seed=0, n=n, dim=12, num_classes=4)
+    test = synthetic.logreg_data(seed=1, n=200, dim=12, num_classes=4)
+    rng = np.random.default_rng(0)
+    parts = partition.size_partition(rng, n, prob.samples.astype(int))
+    ue_data = [{k: train[k][ix] for k in train} for ix in parts]
+    init = lenet.logreg_init(jax.random.PRNGKey(0), 12, 4)
+
+    def loss_fn(p, b):
+        return lenet.logreg_loss(p, b, l2=1e-3)
+
+    return sch, loss_fn, init, ue_data, test
+
+
+def test_sim_null_fault_model_parity(fl_setup):
+    from repro.fl.sim import HFLSimulator
+    sch, loss_fn, init, ue_data, test = fl_setup
+    r0 = HFLSimulator(sch, loss_fn, init, ue_data,
+                      lr=0.02).run(test, rounds=3)
+    r1 = HFLSimulator(sch, loss_fn, init, ue_data, lr=0.02,
+                      fault_model=faults.FaultModel()).run(test, rounds=3)
+    np.testing.assert_array_equal(r0.test_loss, r1.test_loss)
+    np.testing.assert_array_equal(r0.times, r1.times)
+
+
+def test_sim_faulted_runs_finite_and_ordered(fl_setup):
+    """Both policies stay finite under heavy combined faults; the
+    deadline policy's clock never exceeds wait-for-all's (same key)."""
+    from repro.fl.sim import HFLSimulator
+    sch, loss_fn, init, ue_data, test = fl_setup
+    fm = faults.FaultModel(
+        dropout=faults.BernoulliDropout(rate=0.4),
+        loss=faults.UplinkLoss(rate=0.3),
+        outage=faults.EdgeOutage(rate=0.1, repair_cycles=2.0))
+    finals = {}
+    for pol in (faults.wait_for_all_policy(),
+                faults.deadline_failover_policy()):
+        res = HFLSimulator(sch, loss_fn, init, ue_data, lr=0.02,
+                           fault_model=fm, fault_policy=pol,
+                           fault_seed=3).run(test, rounds=3)
+        assert np.all(np.isfinite(res.test_loss)), pol.name
+        finals[pol.name] = float(res.times[-1])
+    assert finals[faults.DEADLINE_FAILOVER] <= \
+        finals[faults.WAIT_FOR_ALL] + 1e-9
+
+
+def test_sim_async_faulted_trace_replays(fl_setup):
+    from repro.fl.sim import HFLSimulator
+    sch, loss_fn, init, ue_data, test = fl_setup
+    fm = faults.FaultModel(dropout=faults.MarkovChurn(p_off=0.2, p_on=0.5),
+                           outage=faults.EdgeOutage(rate=0.15,
+                                                    repair_cycles=2.0))
+    res = HFLSimulator(sch, loss_fn, init, ue_data, lr=0.02, mode="async",
+                       max_staleness=1, fault_model=fm,
+                       fault_seed=1).run(test, rounds=3)
+    assert np.all(np.isfinite(res.test_loss))
+    assert res.timeline is not None
+    assert np.all(np.diff(res.times) >= 0)
+
+
+def test_sim_fault_model_validation(fl_setup):
+    import dataclasses
+
+    from repro.fl.sim import HFLSimulator
+    sch, loss_fn, init, ue_data, test = fl_setup
+    fm = faults.FaultModel(dropout=faults.BernoulliDropout(rate=0.2))
+    with pytest.raises(ValueError, match="solver='gd'"):
+        HFLSimulator(sch, loss_fn, init, ue_data, solver="dane",
+                     fault_model=fm)
+    bare = dataclasses.replace(sch, problem=None)
+    with pytest.raises(ValueError, match="schedule.problem"):
+        HFLSimulator(bare, loss_fn, init, ue_data, fault_model=fm)

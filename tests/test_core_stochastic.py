@@ -211,8 +211,21 @@ def test_unassigned_ues_are_ignored_like_the_deterministic_pipeline():
 
 def test_scenario_registry_lookup():
     assert set(stochastic.SCENARIOS) >= {"deterministic", "iid_campus",
-                                         "urban_stragglers", "flaky_uplink"}
+                                         "urban_stragglers", "flaky_uplink",
+                                         "ue_churn", "edge_outage",
+                                         "lossy_uplink"}
     s = stochastic.scenario("flaky_uplink")
     assert s.name == "flaky_uplink" and s.regime and s.description
-    with pytest.raises(KeyError):
+    # unknown names get an actionable ValueError listing the registry
+    with pytest.raises(ValueError, match="urban_stragglers"):
         stochastic.scenario("nope")
+
+
+def test_fault_scenarios_carry_fault_models():
+    from repro.core import faults
+    for name in ("ue_churn", "edge_outage", "lossy_uplink"):
+        s = stochastic.scenario(name)
+        assert isinstance(s.faults, faults.FaultModel) and \
+            not s.faults.is_null(), name
+    # pre-existing scenarios stay fault-free
+    assert stochastic.scenario("deterministic").faults is None

@@ -201,6 +201,79 @@ DRAWS_SCRIPT = textwrap.dedent("""
 """)
 
 
+DEAD_COHORT_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import sys; sys.path.insert(0, sys.argv[1])
+    import numpy as np, jax.numpy as jnp
+    from repro.fl import aggregate
+    from repro.fl.flatten import FlatLayout, ShardedFlatLayout
+    from repro.launch.mesh import make_agg_mesh
+
+    rng = np.random.default_rng(7)
+    N, F, M = 24, 96, 3
+    x = jnp.asarray(rng.normal(0, 1, (N, F)), jnp.float32)
+    w = jnp.asarray(rng.uniform(1, 5, N), jnp.float32)
+    gid = jnp.asarray(np.repeat([0, 1, 2], 8), jnp.int32)
+    # edge 1's cohort drops ENTIRELY; edge 0 loses half; edge 2 intact
+    surv = np.ones(N, bool); surv[8:16] = False; surv[:4] = False
+    wf = aggregate.survivor_weights(w, jnp.asarray(surv), gid, M)
+    wn = np.asarray(wf)
+    assert np.all(wn[8:16] == 0) and np.all(wn[:4] == 0)
+    # per-edge mass of the SURVIVING edges is preserved
+    for g in (0, 2):
+        np.testing.assert_allclose(wn[gid == g].sum(),
+                                   np.asarray(w)[np.asarray(gid) == g].sum(),
+                                   rtol=1e-5)
+    # cloud weights: full D_n on delivering edges, zero on the dead one
+    wc = np.asarray(w) * (np.asarray(gid) != 1)
+
+    # survivor oracle: dead cohort -> zero rows; cloud mean over survivors
+    xo, wo = np.asarray(x, np.float64), np.asarray(wn, np.float64)
+    oracle = np.zeros_like(xo)
+    for g in range(M):
+        mask = np.asarray(gid) == g
+        if wo[mask].sum() > 0:
+            oracle[mask] = (wo[mask, None] * xo[mask]).sum(0) / \\
+                wo[mask].sum()
+    # cloud oracle feeds on the edge-aggregated rows (survivor means)
+    oracle_cloud = np.broadcast_to(
+        (wc[:, None] * oracle).sum(0) / wc.sum(), xo.shape)
+
+    for uk in (False, True):       # jnp body AND Pallas (interpret mode)
+        oe = np.asarray(aggregate.flat_edge_aggregate(x, wf, gid, M,
+                                                      use_kernel=uk))
+        assert np.all(np.isfinite(oe)), f"NaN from dead cohort (uk={uk})"
+        np.testing.assert_allclose(oe, oracle, atol=1e-5)
+        assert np.all(oe[8:16] == 0)
+        oc = np.asarray(aggregate.flat_cloud_aggregate(
+            oe, jnp.asarray(wc, jnp.float32), use_kernel=uk))
+        assert np.all(np.isfinite(oc))
+        np.testing.assert_allclose(oc, oracle_cloud, atol=1e-5)
+
+    # same invariants on an 8-device ('data','model') mesh
+    layout = FlatLayout.of({"a": x})
+    for (d, m) in [(2, 4), (8, 1)]:
+        mesh = make_agg_mesh(m, d)
+        sl = ShardedFlatLayout.build(layout, mesh, num_rows=N,
+                                     group_ids=np.asarray(gid))
+        buf = sl.pad(x)
+        hw = aggregate.survivor_weights(sl.pad_weights(w),
+                                        sl.pad_rows(jnp.asarray(surv)),
+                                        sl.pad_rows(gid), M)
+        for uk in (False, True):
+            oe = sl.unpad(aggregate.flat_edge_aggregate(
+                buf, hw, sl.pad_rows(gid), M, mesh=mesh, use_kernel=uk))
+            oe = np.asarray(oe)
+            assert np.all(np.isfinite(oe)), (d, m, uk)
+            np.testing.assert_allclose(oe, oracle, atol=1e-5)
+            assert np.all(oe[8:16] == 0)
+        print(f"OK data={d} model={m}")
+    print("OK all")
+""")
+
+
 def _run(script):
     r = subprocess.run([sys.executable, "-c", script, SRC],
                        capture_output=True, text=True, timeout=600)
@@ -221,6 +294,15 @@ def test_simulator_mesh_trajectory_parity():
 @pytest.mark.slow
 def test_async_simulator_mesh_trajectory_parity():
     _run(ASYNC_SIM_SCRIPT)
+
+
+@pytest.mark.slow
+def test_dead_cohort_contributes_zero_not_nan():
+    """Fault-injection invariant (core.faults): an edge whose UEs ALL
+    drop yields zero (never NaN) from the survivor-weighted eq. 6 mean,
+    and the cloud mean reweights to the delivering edges — on the jnp
+    body, the Pallas kernels, and an 8-device mesh."""
+    _run(DEAD_COHORT_SCRIPT)
 
 
 @pytest.mark.slow
