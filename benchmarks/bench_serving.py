@@ -17,12 +17,18 @@ from repro.models import build_model
 
 ARCHS = ("stablelm-1.6b", "mixtral-8x7b", "recurrentgemma-9b",
          "xlstm-125m", "whisper-base")
+#: ``--smoke`` subset: one decoder-only, one MoE, one recurrent — enough
+#: to keep every serve-step code path compiling in CI without paying for
+#: the full family sweep.
+SMOKE_ARCHS = ("stablelm-1.6b", "mixtral-8x7b", "xlstm-125m")
 
 
-def run(csv_rows: list):
+def run(csv_rows: list, smoke: bool = False):
+    archs = SMOKE_ARCHS if smoke else ARCHS
+    decode_steps = 4 if smoke else 12
     print("\n[serving] arch                 prefill ms   ms/token (B=4, "
-          "prompt=48, +12 tok, smoke cfg)")
-    for arch in ARCHS:
+          f"prompt=48, +{decode_steps} tok, smoke cfg)")
+    for arch in archs:
         cfg = get_config(arch, smoke=True)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
@@ -45,11 +51,22 @@ def run(csv_rows: list):
         tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
         tok, state = step(params, state, tok)            # compile
         t0 = time.perf_counter()
-        for _ in range(12):
+        for _ in range(decode_steps):
             tok, state = step(params, state, tok)
         jax.block_until_ready(tok)
-        ms_tok = (time.perf_counter() - t0) / 12 * 1e3
+        ms_tok = (time.perf_counter() - t0) / decode_steps * 1e3
         assert np.isfinite(np.asarray(tok)).all()
         print(f"      {arch:22s} {t_prefill:9.1f}   {ms_tok:9.2f}")
         csv_rows.append(("serving", arch, ms_tok * 1e3,
                          f"prefill_ms={t_prefill:.1f}"))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one arch per major family, 4 decode steps (CI)")
+    args = ap.parse_args()
+    rows: list = []
+    run(rows, smoke=args.smoke)

@@ -18,7 +18,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from benchmarks import (bench_ablation, bench_association, bench_async,
                         bench_convergence, bench_faults, bench_iterations,
                         bench_kernels, bench_optimizer, bench_roofline,
-                        bench_serving, bench_shard, bench_stochastic)
+                        bench_service, bench_serving, bench_shard,
+                        bench_stochastic)
 
 SUITES = {
     "iterations": bench_iterations.run,     # Figs. 2-3
@@ -33,6 +34,7 @@ SUITES = {
     "roofline": bench_roofline.run,         # EXPERIMENTS.md §Roofline
     "ablation": bench_ablation.run,         # beyond-paper ablations
     "serving": bench_serving.run,           # decode throughput (smoke)
+    "service": bench_service.run,           # always-on control plane SLOs
 }
 
 

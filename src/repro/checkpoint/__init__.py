@@ -1,3 +1,5 @@
-from repro.checkpoint.npz import load_pytree, save_pytree
+from repro.checkpoint.npz import (CheckpointError, latest_checkpoint,
+                                  list_checkpoints, load_pytree, save_pytree)
 
-__all__ = ["save_pytree", "load_pytree"]
+__all__ = ["save_pytree", "load_pytree", "CheckpointError",
+           "latest_checkpoint", "list_checkpoints"]

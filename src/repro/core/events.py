@@ -48,9 +48,19 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Tuple
+import json
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
+
+#: Schema identity of the serialized trace (``AsyncTimeline.to_jsonl`` /
+#: ``load_trace_jsonl``) — bump the version on any record-shape change so
+#: stale exports are rejected instead of silently misread.
+TRACE_SCHEMA = "hfl-async-trace"
+TRACE_VERSION = 1
+
+#: Version tag carried inside ``AsyncEngine.snapshot()`` dicts.
+ENGINE_SNAPSHOT_VERSION = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,6 +183,318 @@ class AsyncTimeline:
         return max((s for u in self.updates for _, _, s in u.merges),
                    default=0)
 
+    # -- serialization ------------------------------------------------------
+
+    def to_jsonl(self, path: str) -> str:
+        """Export the trace as versioned JSON lines (post-hoc inspection).
+
+        Line 1 is a header ``{"schema": "hfl-async-trace", "version": 1,
+        ...}`` with the run parameters and makespan; every following line
+        is one trace record ``{"kind": "depart"|"update"|"fail"|"repair",
+        ...}`` in exact occurrence order.  ``load_trace_jsonl`` validates
+        the header and rejects unknown schema/version values, so a reader
+        never silently misinterprets records written by a different
+        build.  Returns ``path``.
+        """
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(json.dumps({
+                "schema": TRACE_SCHEMA, "version": TRACE_VERSION,
+                "num_edges": int(self.num_edges), "rounds": int(self.rounds),
+                "max_staleness": int(self.max_staleness),
+                "start": float(self.start),
+                "makespan": float(self.makespan),
+                "num_records": len(self.trace),
+            }) + "\n")
+            for kind, ev in self.trace:
+                rec = {"kind": kind}
+                for fld, val in dataclasses.asdict(ev).items():
+                    if fld == "merges":
+                        val = [[int(e), int(c), int(s)] for e, c, s in val]
+                    elif isinstance(val, (np.integer, int)):
+                        val = int(val)
+                    else:
+                        val = float(val)
+                    rec[fld] = val
+                f.write(json.dumps(rec) + "\n")
+        return path
+
+
+def load_trace_jsonl(path: str) -> Tuple[dict, List[dict]]:
+    """Load + validate a trace written by ``AsyncTimeline.to_jsonl``.
+
+    Returns ``(header, records)``.  Raises ``ValueError`` on a missing or
+    foreign header, an unknown schema version, or a record-count mismatch
+    (a truncated export).
+    """
+    with open(path, encoding="utf-8") as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    if not lines:
+        raise ValueError(f"{path}: empty trace file (no header line)")
+    try:
+        header = json.loads(lines[0])
+    except json.JSONDecodeError as e:
+        raise ValueError(f"{path}: malformed trace header: {e}") from None
+    if header.get("schema") != TRACE_SCHEMA:
+        raise ValueError(
+            f"{path}: not an {TRACE_SCHEMA} export "
+            f"(schema={header.get('schema')!r})")
+    if header.get("version") != TRACE_VERSION:
+        raise ValueError(
+            f"{path}: unknown trace schema version "
+            f"{header.get('version')!r}; this build reads version "
+            f"{TRACE_VERSION} only")
+    records = [json.loads(ln) for ln in lines[1:]]
+    if len(records) != header.get("num_records"):
+        raise ValueError(
+            f"{path}: truncated trace — header promises "
+            f"{header.get('num_records')} records, file holds "
+            f"{len(records)}")
+    return header, records
+
+
+class AsyncEngine:
+    """Steppable twin of ``simulate_async`` — the resumable control-plane
+    core (BEYOND-PAPER, PR 7).
+
+    ``simulate_async`` drives this engine to completion in one call; a
+    long-running service (``repro.launch.service``) instead calls
+    ``step()`` once per event boundary, interleaving model replay, SLO
+    accounting and durable checkpoints between events.  The engine's
+    whole dynamic state is plain numpy/python — ``snapshot()`` captures
+    it losslessly (float64 clocks, int64 counters) and ``restore()``
+    resumes a fresh engine to the exact event boundary, so a crash-killed
+    run continues bit-identically.
+
+    Parameters mirror ``simulate_async`` except that per-cycle costs come
+    from a CALLABLE ``cost(edge, cycle, t_depart)`` (1-based cycle; the
+    depart time lets a service price bursts/scenario epochs by wall
+    clock).  The callable must be a pure function of its arguments for
+    snapshot/restore determinism — the engine never samples.
+
+    ``max_staleness`` is writable mid-run (>= 1 only; barrier mode is
+    frozen at construction): an overloaded service TIGHTENS the gate by
+    assigning a smaller value, which takes effect at the next gate
+    release.  ``quota`` may be ``None`` for an open-ended run (the caller
+    stops stepping when it pleases).
+    """
+
+    def __init__(self, num_edges: int, cost: Callable[[int, int, float], float],
+                 *, quota: Optional[int], max_staleness: int,
+                 start: float = 0.0, outages=None, failover: bool = False):
+        self.M = int(num_edges)
+        self._cost = cost
+        self.quota = quota
+        self.max_staleness = int(max_staleness)
+        self._barrier = self.max_staleness == 0
+        self.start = float(start)
+        self.failover = bool(failover)
+        self.win: List[List[Tuple[float, float]]] = [[] for _ in range(self.M)]
+        for m, f, r in (outages or []):
+            self.win[int(m)].append((float(f), float(r)))
+        for w in self.win:
+            w.sort()
+        self.have_outages = any(self.win)
+        # -- dynamic state (everything snapshot() captures) -----------------
+        self.heap: list = []                # (arrival_t, edge, cycle)
+        self.completed = np.zeros(self.M, dtype=np.int64)
+        self.dep_version = np.zeros(self.M, dtype=np.int64)
+        self.dep_time = np.zeros(self.M)
+        self.version = 0
+        self.delivered = 0
+        self.gated: set = set()
+        self.pending: List[Tuple[float, int, int]] = []   # barrier mode
+        # -- trace accumulators (NOT part of the snapshot) -------------------
+        self.departures: List[Departure] = []
+        self.updates: List[CloudUpdate] = []
+        self.failures: List[EdgeFail] = []
+        self.repairs: List[EdgeRepair] = []
+        self.trace: List[tuple] = []
+        for m in range(self.M):
+            self._depart(m, 1, self.start)
+
+    # ------------------------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        return not self.heap or (self.quota is not None
+                                 and self.delivered >= self.quota)
+
+    def _down_at(self, m: int, t: float):
+        """The outage window covering time ``t`` on edge ``m``, else None."""
+        for f, r in self.win[m]:
+            if f <= t < r:
+                return (f, r)
+            if f > t:
+                break
+        return None
+
+    def _depart(self, m: int, cycle: int, t: float) -> None:
+        if self.win[m]:                   # idle edge waits an outage out
+            covering = self._down_at(m, t)
+            if covering is not None:
+                t = covering[1]
+        ct = self._cost(m, cycle, t)
+        if not (np.isfinite(ct) and ct > 0):
+            raise ValueError(f"cost({m}, {cycle}, {t}) = {ct!r}; cycle "
+                             f"costs must be finite and positive")
+        d = Departure(t=t, edge=m, cycle=cycle, version=self.version)
+        self.departures.append(d)
+        self.trace.append(("depart", d))
+        self.dep_version[m] = self.version
+        self.dep_time[m] = t
+        heapq.heappush(self.heap, (t + ct, m, cycle))
+
+    def _voided(self, m: int, c: int, t_arr: float) -> bool:
+        """If an outage opened mid-flight, void the cycle, record the
+        fail/repair events and re-depart the same cycle at repair."""
+        if not self.win[m]:
+            return False
+        for f, r in self.win[m]:
+            if self.dep_time[m] < f < t_arr:
+                ev_f = EdgeFail(t=f, edge=m, cycle=c)
+                ev_r = EdgeRepair(t=r, edge=m)
+                self.failures.append(ev_f)
+                self.repairs.append(ev_r)
+                self.trace.append(("fail", ev_f))
+                self.trace.append(("repair", ev_r))
+                self._depart(m, c, r)
+                return True
+            if f >= t_arr:
+                break
+        return False
+
+    def step(self) -> List[tuple]:
+        """Process ONE in-flight arrival (one event boundary).
+
+        Pops the earliest pending arrival and either voids it (outage
+        opened mid-flight: fail/repair/re-depart records) or applies its
+        cloud update and releases any gate-eligible edges.  Returns the
+        trace records appended by this step, in order — a barrier-mode
+        arrival that merely joins the pending set returns ``[]``.  Calling
+        ``step`` when ``done`` raises.
+        """
+        if self.done:
+            raise RuntimeError("engine is done (quota reached or no "
+                               "in-flight cycles); check .done before step()")
+        n0 = len(self.trace)
+        t, m, c = heapq.heappop(self.heap)
+        if self._voided(m, c, t):
+            return self.trace[n0:]
+        if self._barrier:
+            self.pending.append((t, m, c))
+            if len(self.pending) < self.M:
+                return self.trace[n0:]
+            self.version += 1
+            u = CloudUpdate(t=t, version=self.version,
+                            merges=tuple((mm, cc, 0)
+                                         for _, mm, cc in self.pending))
+            self.updates.append(u)
+            self.trace.append(("update", u))
+            self.completed[:] = c
+            self.delivered += self.M
+            self.pending = []
+            if self.quota is None or self.delivered < self.quota:
+                for mm in range(self.M):
+                    self._depart(mm, c + 1, t)
+            return self.trace[n0:]
+        self.version += 1
+        u = CloudUpdate(t=t, version=self.version,
+                        merges=((m, c, int(self.version - 1 -
+                                           self.dep_version[m])),))
+        self.updates.append(u)
+        self.trace.append(("update", u))
+        self.completed[m] = c
+        self.delivered += 1
+        if self.quota is not None and self.delivered >= self.quota:
+            return self.trace[n0:]
+        self.gated.add(m)
+        if self.failover and self.have_outages:
+            # Down edges don't drag the staleness floor: survivors keep
+            # progressing through the outage (failover), instead of
+            # everyone gating behind the dead edge.
+            up = np.array([self._down_at(mm, t) is None
+                           for mm in range(self.M)])
+            floor = int(self.completed[up].min()) if up.any() \
+                else int(self.completed.min())
+        else:
+            floor = int(self.completed.min())
+        for mm in sorted(self.gated):
+            if self.completed[mm] - floor <= self.max_staleness:
+                self._depart(mm, int(self.completed[mm]) + 1, t)
+                self.gated.discard(mm)
+        return self.trace[n0:]
+
+    # -- durable state ---------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Lossless dict of the engine's dynamic state, plain numpy only.
+
+        Everything the next ``step()`` depends on is captured: the event
+        heap (float64 arrival clocks), per-edge cycle/version/depart
+        bookkeeping, the gate set, the barrier pending list and the
+        CURRENT (possibly service-tightened) ``max_staleness``.  The
+        trace accumulators are deliberately excluded — a service
+        checkpoints its own normalized trace.  Restoring this snapshot
+        into an engine built with the same configuration resumes the run
+        bit-identically (the float64 clock is exact).
+        """
+        heap = sorted(self.heap)
+        pend = self.pending
+        return {
+            "version_tag": np.int64(ENGINE_SNAPSHOT_VERSION),
+            "heap_t": np.asarray([h[0] for h in heap], dtype=np.float64),
+            "heap_edge": np.asarray([h[1] for h in heap], dtype=np.int64),
+            "heap_cycle": np.asarray([h[2] for h in heap], dtype=np.int64),
+            "completed": self.completed.copy(),
+            "dep_version": self.dep_version.copy(),
+            "dep_time": self.dep_time.copy(),
+            "version": np.int64(self.version),
+            "delivered": np.int64(self.delivered),
+            "gated": np.asarray(sorted(self.gated), dtype=np.int64),
+            "pending_t": np.asarray([p[0] for p in pend], dtype=np.float64),
+            "pending_edge": np.asarray([p[1] for p in pend], dtype=np.int64),
+            "pending_cycle": np.asarray([p[2] for p in pend],
+                                        dtype=np.int64),
+            "max_staleness": np.int64(self.max_staleness),
+        }
+
+    def restore(self, snap: dict) -> "AsyncEngine":
+        """Overwrite the dynamic state with ``snap`` (from ``snapshot``).
+
+        The engine must have been constructed with the same
+        configuration (edges, cost function, outages, failover); the
+        constructor's initial departures are discarded along with every
+        trace accumulator — records after a restore describe the resumed
+        segment only.
+        """
+        tag = int(np.asarray(snap["version_tag"]))
+        if tag != ENGINE_SNAPSHOT_VERSION:
+            raise ValueError(f"unknown engine snapshot version {tag}; this "
+                             f"build reads version "
+                             f"{ENGINE_SNAPSHOT_VERSION} only")
+        self.heap = [(float(t), int(m), int(c)) for t, m, c in
+                     zip(np.asarray(snap["heap_t"]),
+                         np.asarray(snap["heap_edge"]),
+                         np.asarray(snap["heap_cycle"]))]
+        heapq.heapify(self.heap)
+        self.completed = np.asarray(snap["completed"],
+                                    dtype=np.int64).copy()
+        self.dep_version = np.asarray(snap["dep_version"],
+                                      dtype=np.int64).copy()
+        self.dep_time = np.asarray(snap["dep_time"],
+                                   dtype=np.float64).copy()
+        self.version = int(np.asarray(snap["version"]))
+        self.delivered = int(np.asarray(snap["delivered"]))
+        self.gated = {int(m) for m in np.asarray(snap["gated"])}
+        self.pending = [(float(t), int(m), int(c)) for t, m, c in
+                        zip(np.asarray(snap["pending_t"]),
+                            np.asarray(snap["pending_edge"]),
+                            np.asarray(snap["pending_cycle"]))]
+        self.max_staleness = int(np.asarray(snap["max_staleness"]))
+        self.departures, self.updates = [], []
+        self.failures, self.repairs, self.trace = [], [], []
+        return self
+
 
 def simulate_async(cycle_times, *, rounds: int, max_staleness: int,
                    start: float = 0.0, outages=None,
@@ -228,26 +550,22 @@ def simulate_async(cycle_times, *, rounds: int, max_staleness: int,
             f"per-cycle matrix needs >= rounds + max_staleness = "
             f"{rounds + max_staleness} rows, got {cycle_times.shape[0]}")
 
-    # Per-edge outage windows, time-sorted (already non-overlapping when
-    # they come from faults.EdgeOutage.sample_windows).
-    win: List[List[Tuple[float, float]]] = [[] for _ in range(M)]
+    # Outage-window validation stays here (the engine trusts its caller,
+    # already non-overlapping when windows come from
+    # faults.EdgeOutage.sample_windows).
     for m, f, r in (outages or []):
         if not (0 <= int(m) < M):
             raise ValueError(f"outage edge {m} out of range for M={M}")
         if not (np.isfinite(f) and np.isfinite(r) and r > f):
             raise ValueError(f"outage window ({f}, {r}) must be finite "
                              f"with t_repair > t_fail")
-        win[int(m)].append((float(f), float(r)))
-    for w in win:
-        w.sort()
-    have_outages = any(win)
-    if failover and have_outages and max_staleness == 0:
+    if failover and any(True for _ in (outages or [])) and max_staleness == 0:
         raise ValueError("failover needs max_staleness >= 1 (the barrier "
                          "has no staleness floor to relax); run the "
                          "wait-for-all baseline at max_staleness=0 instead")
 
     if cycle_times.ndim == 2:
-        def cost(m: int, c: int) -> float:
+        def cost(m: int, c: int, t: float) -> float:
             if c - 1 >= cycle_times.shape[0]:
                 raise ValueError(
                     f"per-cycle matrix exhausted: edge {m} needs cycle "
@@ -256,120 +574,19 @@ def simulate_async(cycle_times, *, rounds: int, max_staleness: int,
                     f"extra cycles — provide more rows)")
             return cycle_times[c - 1, m]
     else:
-        def cost(m: int, c: int) -> float:
+        def cost(m: int, c: int, t: float) -> float:
             return cycle_times[m]
 
-    def down_at(m: int, t: float):
-        """The window covering time ``t`` on edge ``m``, else None."""
-        for f, r in win[m]:
-            if f <= t < r:
-                return (f, r)
-            if f > t:
-                break
-        return None
+    eng = AsyncEngine(M, cost, quota=rounds * M,
+                      max_staleness=max_staleness, start=start,
+                      outages=outages, failover=failover)
+    while not eng.done:
+        eng.step()
 
-    quota = rounds * M
-    departures: List[Departure] = []
-    updates: List[CloudUpdate] = []
-    failures: List[EdgeFail] = []
-    repairs: List[EdgeRepair] = []
-    trace: List[tuple] = []
-    heap: list = []                       # (arrival_t, edge, cycle)
-    completed = np.zeros(M, dtype=np.int64)   # merged deliveries per edge
-    dep_version = np.zeros(M, dtype=np.int64)
-    dep_time = np.zeros(M)
-    version = 0
-    delivered = 0
-
-    def depart(m: int, cycle: int, t: float) -> None:
-        if win[m]:                        # idle edge waits an outage out
-            covering = down_at(m, t)
-            if covering is not None:
-                t = covering[1]
-        d = Departure(t=t, edge=m, cycle=cycle, version=version)
-        departures.append(d)
-        trace.append(("depart", d))
-        dep_version[m] = version
-        dep_time[m] = t
-        heapq.heappush(heap, (t + cost(m, cycle), m, cycle))
-
-    def voided(m: int, c: int, t_arr: float) -> bool:
-        """If an outage opened mid-flight, void the cycle, record the
-        fail/repair events and re-depart the same cycle at repair."""
-        if not win[m]:
-            return False
-        for f, r in win[m]:
-            if dep_time[m] < f < t_arr:
-                ev_f = EdgeFail(t=f, edge=m, cycle=c)
-                ev_r = EdgeRepair(t=r, edge=m)
-                failures.append(ev_f)
-                repairs.append(ev_r)
-                trace.append(("fail", ev_f))
-                trace.append(("repair", ev_r))
-                depart(m, c, r)
-                return True
-            if f >= t_arr:
-                break
-        return False
-
-    for m in range(M):
-        depart(m, 1, start)
-
-    if max_staleness == 0:
-        # Barrier mode: hold arrivals until every edge has delivered this
-        # cycle, then apply ONE merge of all M at the slowest arrival time.
-        pending: List[Tuple[float, int, int]] = []
-        while heap and delivered < quota:
-            t, m, c = heapq.heappop(heap)
-            if voided(m, c, t):
-                continue
-            pending.append((t, m, c))
-            if len(pending) < M:
-                continue
-            version += 1
-            u = CloudUpdate(t=t, version=version,
-                            merges=tuple((mm, cc, 0) for _, mm, cc in pending))
-            updates.append(u)
-            trace.append(("update", u))
-            completed[:] = c
-            delivered += M
-            pending = []
-            if delivered < quota:
-                for mm in range(M):
-                    depart(mm, c + 1, t)
-    else:
-        gated: set = set()
-        while heap and delivered < quota:
-            t, m, c = heapq.heappop(heap)
-            if voided(m, c, t):
-                continue
-            version += 1
-            u = CloudUpdate(t=t, version=version,
-                            merges=((m, c, int(version - 1 - dep_version[m])),))
-            updates.append(u)
-            trace.append(("update", u))
-            completed[m] = c
-            delivered += 1
-            if delivered >= quota:
-                break
-            gated.add(m)
-            if failover and have_outages:
-                # Down edges don't drag the staleness floor: survivors
-                # keep progressing through the outage (failover), instead
-                # of everyone gating behind the dead edge.
-                up = np.array([down_at(mm, t) is None for mm in range(M)])
-                floor = int(completed[up].min()) if up.any() \
-                    else int(completed.min())
-            else:
-                floor = int(completed.min())
-            for mm in sorted(gated):
-                if completed[mm] - floor <= max_staleness:
-                    depart(mm, int(completed[mm]) + 1, t)
-                    gated.discard(mm)
-
-    makespan = (updates[-1].t - start) if updates else 0.0
+    makespan = (eng.updates[-1].t - start) if eng.updates else 0.0
     return AsyncTimeline(num_edges=M, rounds=rounds,
                          max_staleness=max_staleness,
-                         cycle_times=cycle_times, departures=departures,
-                         updates=updates, trace=trace, makespan=makespan,
-                         start=start, failures=failures, repairs=repairs)
+                         cycle_times=cycle_times,
+                         departures=eng.departures, updates=eng.updates,
+                         trace=eng.trace, makespan=makespan, start=start,
+                         failures=eng.failures, repairs=eng.repairs)

@@ -393,3 +393,67 @@ def sample_cycle_times(model: DelayModel, key, problem: HFLProblem, assoc,
     ``events.simulate_async`` (rows = consecutive cycles).
     """
     return model.cycle_times(key, problem, assoc, a, b, num_draws)
+
+
+# ---------------------------------------------------------------------------
+# Key-offset resumable sampling (the always-on service, PR 7).
+# ---------------------------------------------------------------------------
+
+#: Rows per key-offset chunk of the virtual infinite cycle matrix.
+CYCLE_BLOCK = 32
+
+
+def cycle_times_chunk(model: DelayModel, key, problem: HFLProblem, assoc,
+                      a, b, chunk: int,
+                      block: int = CYCLE_BLOCK) -> np.ndarray:
+    """Rows ``[chunk*block, (chunk+1)*block)`` of the VIRTUAL infinite
+    per-cycle matrix, as an independent keyed draw.
+
+    ``model.cycle_times(key, n)`` draws all ``n`` rows from one key, so
+    requesting a different row count changes EVERY row — a resumed run
+    that needs "the next 40 cycles" could not reproduce the draws its
+    crashed predecessor consumed.  This chunked form fixes the draw
+    boundary: chunk ``i`` is sampled under ``fold_in(key, i)``, making
+    row ``c`` a pure function of ``(key, c // block)`` — independent of
+    how many rows were drawn before, in what order, or by which process.
+    Crash-resume replays therefore see bit-identical delays without
+    re-sampling the consumed prefix.
+    """
+    k = jax.random.fold_in(ensure_key(key), int(chunk))
+    return np.asarray(model.cycle_times(k, problem, assoc, a, b, int(block)))
+
+
+class CycleTimeSource:
+    """Lazy, replay-stable view of the infinite per-cycle delay matrix.
+
+    ``row(c)`` returns the (M,) float64 cost row of 0-based cycle ``c``,
+    sampling (and caching) the containing key-offset chunk on demand via
+    ``cycle_times_chunk``.  Two sources built from the same arguments
+    agree on every row regardless of access pattern — the property the
+    service's checkpoint/resume path relies on (PRNG state never needs
+    checkpointing; only the base key does).
+    """
+
+    def __init__(self, model: DelayModel, key, problem: HFLProblem, assoc,
+                 a, b, block: int = CYCLE_BLOCK):
+        if int(block) < 1:
+            raise ValueError(f"block must be >= 1, got {block}")
+        self.model = model
+        self.key = ensure_key(key)
+        self.problem = problem
+        self.assoc = np.asarray(assoc)
+        self.a, self.b = a, b
+        self.block = int(block)
+        self._chunks: Dict[int, np.ndarray] = {}
+
+    def row(self, c: int) -> np.ndarray:
+        chunk, off = divmod(int(c), self.block)
+        if chunk not in self._chunks:
+            self._chunks[chunk] = cycle_times_chunk(
+                self.model, self.key, self.problem, self.assoc, self.a,
+                self.b, chunk, self.block)
+        return self._chunks[chunk][off]
+
+    def cost(self, m: int, cycle: int) -> float:
+        """Cost of edge ``m``'s 1-based ``cycle`` (engine convention)."""
+        return float(self.row(cycle - 1)[m])

@@ -198,9 +198,9 @@ class HFLSimulator:
         self._cloud_round = self._build_cloud_round()
         if mode == "async":
             self._depart_cycle, self._merge = self._build_async_ops()
+        self._weighted_ops_cache = None
         if fault_model is not None:
-            (self._faulty_cloud_round,
-             self._faulty_depart) = self._build_faulty_ops()
+            self._weighted_ops()            # build eagerly for fault runs
         # Weight-averaged train loss over ALL UEs (one vmap'd loss).
         self._train_loss = jax.jit(
             lambda gp, batches, w: jnp.sum(
@@ -402,6 +402,111 @@ class HFLSimulator:
         mean = jnp.tensordot(w, self._flat, axes=1)      # (f_padded,)
         return self._layout.unravel_single(mean[:self._layout.total])
 
+    def _weighted_ops(self):
+        """Jitted runtime-weight twins (``_build_faulty_ops``), built on
+        first use — fault runs need them, and so does the service's
+        overload-shed departure path (without any ``fault_model``)."""
+        if self._weighted_ops_cache is None:
+            self._weighted_ops_cache = self._build_faulty_ops()
+            (self._faulty_cloud_round,
+             self._faulty_depart) = self._weighted_ops_cache
+        return self._weighted_ops_cache
+
+    # ------------------------------------------------------------------
+    # Public replay hooks (mode='async') — the event-replay primitives
+    # `_run_async` is built from, exposed so an external driver (the
+    # always-on service, repro.launch.service) can advance the SAME model
+    # state one event at a time, checkpoint it, and resume.
+    # ------------------------------------------------------------------
+
+    def cloud_vector(self):
+        """(F_hot,) f32 cloud model vector: the weighted mean of the
+        current flat buffer (sharded to the column spec under a mesh)."""
+        w_np = np.asarray(self._hot_weights)
+        g = jnp.tensordot(jnp.asarray(w_np / w_np.sum(), jnp.float32),
+                          self._flat, axes=1)
+        return self.place_cloud_vector(g)
+
+    def place_cloud_vector(self, g):
+        """Device-place a cloud vector consistently with the hot layout."""
+        g = jnp.asarray(g, jnp.float32)
+        if self.mesh is not None:
+            g = jax.device_put(
+                g, NamedSharding(self.mesh, self._slayout.col_spec))
+        return g
+
+    def replay_departure(self, g, mask, ue_ok=None) -> None:
+        """One departure wave: re-seed the masked rows from ``g``, run
+        their b-iteration edge cycle and commit them into the flat buffer.
+
+        ``mask`` is an (N_hot,) bool over hot rows (the departing
+        cohorts).  With ``ue_ok`` (an (N_hot,) bool of per-UE
+        participation — fault survivors, or the service's overload shed)
+        the wave aggregates under mass-preserving survivor-renormalized
+        weights (``aggregate.survivor_weights``); rows of excluded UEs
+        still train but carry zero weight, keeping eq. 6 the unbiased
+        mean of the participants.
+        """
+        if self.mode != "async":
+            raise RuntimeError("replay_departure requires mode='async'")
+        if ue_ok is not None:
+            w_edge, _ = self._fault_round_weights(np.asarray(ue_ok))
+            _, faulty_depart = self._weighted_ops()
+            self._flat = faulty_depart(self._flat, g, self._hot_batches,
+                                       jnp.asarray(mask), w_edge)
+        else:
+            self._flat = self._depart_cycle(self._flat, g,
+                                            self._hot_batches,
+                                            jnp.asarray(mask))
+
+    def replay_merge(self, g, decay: np.ndarray):
+        """Staleness-weighted cloud merge of the arrived edges.
+
+        ``decay`` is (M,) float64 per-edge effective decay
+        (``staleness_decay ** lag`` for arrived edges, 0 elsewhere);
+        returns the updated cloud vector (one psum under a mesh).
+        """
+        if self.mode != "async":
+            raise RuntimeError("replay_merge requires mode='async'")
+        gids = np.asarray(self._hot_gids)
+        eff = jnp.asarray(np.asarray(self._hot_weights) *
+                          np.asarray(decay)[gids], jnp.float32)
+        return self._merge(g, self._flat, eff)
+
+    def edge_mean_row(self, m: int):
+        """(F_hot,) f32 — edge ``m``'s model right after its cycle's
+        eq. 6 aggregation (every cohort row holds the edge mean, so one
+        member row IS the edge contribution a cloud merge consumes)."""
+        idx = int(np.flatnonzero(np.asarray(self._hot_gids) == int(m))[0])
+        return self._flat[idx]
+
+    def edge_mass(self, m: int) -> float:
+        """Total aggregation weight of edge ``m``'s cohort (float64)."""
+        w = np.asarray(self._hot_weights, np.float64)
+        return float(w[np.asarray(self._hot_gids) == int(m)].sum())
+
+    def global_from_vector(self, g):
+        """Unravel a cloud vector into the global parameter pytree."""
+        return self._layout.unravel_single(
+            jnp.asarray(g)[:self._layout.total])
+
+    def flat_state(self) -> np.ndarray:
+        """Host copy of the hot flat buffer (checkpoint payload)."""
+        return np.asarray(jax.device_get(self._flat))
+
+    def set_flat_state(self, flat: np.ndarray) -> None:
+        """Restore the hot flat buffer from a host array (resume path)."""
+        flat = jnp.asarray(flat, jnp.float32)
+        if flat.shape != self._flat.shape:
+            raise ValueError(f"flat buffer shape {flat.shape} does not "
+                             f"match this simulator's hot layout "
+                             f"{self._flat.shape} — resume with the same "
+                             f"schedule/mesh the checkpoint was taken on")
+        if self._slayout is not None:
+            flat = jax.device_put(
+                flat, NamedSharding(self.mesh, self._slayout.spec))
+        self._flat = flat
+
     # ------------------------------------------------------------------
 
     def run(self, test_batch: dict, rounds: Optional[int] = None,
@@ -539,16 +644,11 @@ class HFLSimulator:
         active = np.asarray(stats["active_edges"])
         gids = np.asarray(self._hot_gids)
         weights_np = np.asarray(self._hot_weights)
-        w_total = float(weights_np.sum())
         test_batch = jax.tree.map(jnp.asarray, test_batch)
 
         # Cloud model vector: weighted mean of the current buffer (== every
         # row right after construction or a previous run).
-        g = jnp.tensordot(jnp.asarray(weights_np / w_total, jnp.float32),
-                          self._flat, axes=1)
-        if self.mesh is not None:
-            g = jax.device_put(
-                g, NamedSharding(self.mesh, self._slayout.col_spec))
+        g = self.cloud_vector()
 
         num_updates = len(tl.updates)
         pending = np.zeros(gids.shape[0], dtype=bool)
@@ -575,16 +675,9 @@ class HFLSimulator:
                 # jnp.asarray may alias the numpy buffer (zero-copy on CPU)
                 # and dispatch is async, so hand over the buffer and start a
                 # fresh one instead of mutating it in place.
-                if surv is not None:
-                    ue_ok = np.where(pending, pending_ok, True)
-                    w_edge, _ = self._fault_round_weights(ue_ok)
-                    self._flat = self._faulty_depart(
-                        self._flat, g, self._hot_batches,
-                        jnp.asarray(pending), w_edge)
-                else:
-                    self._flat = self._depart_cycle(
-                        self._flat, g, self._hot_batches,
-                        jnp.asarray(pending))
+                ue_ok = (np.where(pending, pending_ok, True)
+                         if surv is not None else None)
+                self.replay_departure(g, pending, ue_ok=ue_ok)
                 pending = np.zeros_like(pending)
             decay = np.zeros(sched.num_edges)
             for e, _, s in ev.merges:
@@ -596,11 +689,10 @@ class HFLSimulator:
                             surv[last_cycle[m_full], cohort]).sum()
                     ok = float(mass > 0)  # dead cohort: zero rows, no merge
                 decay[m_full] = ok * self.staleness_decay ** s
-            eff = jnp.asarray(weights_np * decay[gids], jnp.float32)
-            g = self._merge(g, self._flat, eff)
+            g = self.replay_merge(g, decay)
             updates_seen += 1
             if updates_seen % eval_every == 0 or updates_seen == num_updates:
-                gp = self._layout.unravel_single(g[:self._layout.total])
+                gp = self.global_from_vector(g)
                 loss, mets = self.loss_fn(gp, test_batch)
                 trl = self._train_loss(gp, self.batches, self.weights)
                 times.append(ev.t)

@@ -1,0 +1,719 @@
+"""Crash-tolerant always-on HFL control plane — BEYOND-PAPER (PR 7).
+
+The paper's pipeline (and every benchmark before this PR) is a BATCH
+job: plan a schedule, simulate R rounds, exit.  Real FL deployments run
+the other way around — the control plane is a long-lived SERVICE that
+ingests edge arrivals forever, survives crashes, and keeps its latency
+SLO under load it did not choose.  ``HFLService`` turns the repo's async
+engine + flat-buffer simulator into exactly that:
+
+* **Live traffic.**  The arrival process is the event-driven engine
+  (``core.events.AsyncEngine``) driven by a REPLAYED trace of scenario
+  segments: each :class:`Segment` names a ``core.stochastic`` scenario
+  (its ``DelayModel`` prices the cycle draws) plus a load multiplier —
+  a 4x burst divides every cycle time by 4, so arrivals land 4x as
+  fast.  Segments switch live at their simulated-time epochs; draws are
+  key-offset chunked (``stochastic.CycleTimeSource``), so a resumed
+  process re-prices every cycle bit-identically without replaying the
+  consumed prefix.
+
+* **A cloud merge queue.**  The paper's cloud aggregation is free; a
+  real parameter server is not.  Every engine delivery enqueues a merge
+  JOB (the edge's eq. 6 mean row + its aggregation mass) into a FIFO
+  queue served at ``merge_cost`` simulated seconds per merge (default:
+  half the mean deterministic cycle time / M — ~50% utilization at
+  load 1).  A job's merge publishes into the cloud vector when its
+  SERVICE completes, with staleness = the engine version lag at arrival
+  plus any merges applied while it queued.  Cycle latency (the SLO
+  metric) is ``service finish - cycle departure``.
+
+* **Overload shedding.**  When the backlog crosses ``backlog_high``
+  the service degrades: the engine's SSP gate tightens to
+  ``degraded_staleness`` (fast edges stop running ahead), the
+  lowest-mass queued jobs are DROPPED (never the in-service head), and
+  departure waves shed the lowest-weight ``ue_shed_frac`` of each
+  cohort via mass-preserving survivor re-weighting
+  (``aggregate.survivor_weights`` — eq. 6 stays the unbiased mean of
+  the participants).  Recovery at ``backlog_low`` restores everything.
+
+* **Durable checkpoints.**  Every ``ckpt_every`` applied events the
+  FULL control-plane state — flat UE buffer, published cloud vector,
+  engine snapshot, merge queue (rows included), service clocks, SLO
+  accumulators, trace — is written atomically through
+  ``checkpoint.save_pytree`` (tmp + fsync + rename).  ``kill -9`` at
+  ANY point loses at most the events since the last checkpoint;
+  ``restore_latest`` falls back through older checkpoints if the newest
+  is damaged, validates the config echo, and the resumed run reproduces
+  the uninterrupted run's event trace exactly and its model to float32
+  re-execution tolerance (<= 1e-6).
+
+Minimal lifecycle::
+
+    sim = default_service_sim(num_ues=24, num_edges=4, max_staleness=4)
+    svc = HFLService(sim, ServiceConfig(
+        segments=(Segment("iid_campus", 1.0, 200.0),
+                  Segment("urban_stragglers", 4.0, 100.0),
+                  Segment("iid_campus", 1.0, float("inf"))),
+        ckpt_dir="ckpts", ckpt_every=50))
+    svc.run(max_updates=400)        # crash here, then ...
+    svc2 = HFLService(default_service_sim(...), same_config)
+    svc2.restore_latest()           # ... resume from the newest ckpt
+    svc2.run(max_updates=400)       # identical trace, same final model
+    print(svc2.summary())           # p50/p95, shed_frac, ckpt overhead
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import json
+import math
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import (CheckpointError, list_checkpoints, load_pytree,
+                              save_pytree)
+from repro.core import delay as delay_lib
+from repro.core import events, stochastic
+
+#: Service checkpoint + trace schema version (see ``checkpoint.npz``'s
+#: module docstring for the on-disk tree) — bump on any layout change.
+SERVICE_CKPT_VERSION = 1
+SERVICE_TRACE_SCHEMA = "hfl-service-trace"
+SERVICE_TRACE_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One epoch of live traffic: a named scenario at a load multiplier.
+
+    ``scenario`` keys ``stochastic.SCENARIOS`` (its delay model prices
+    the cycle draws; a scenario's fault process is not replayed by the
+    service — use the batch simulator for fault studies).  ``load``
+    divides every cycle time drawn inside the segment, so ``load=4.0``
+    is a 4x arrival burst.  ``duration`` is simulated seconds; the last
+    segment may be ``inf`` (the service runs until its update budget).
+    """
+    scenario: str
+    load: float = 1.0
+    duration: float = math.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Control-plane knobs.  Frozen so the checkpoint config echo is a
+    faithful identity check on resume."""
+    segments: Tuple[Segment, ...] = (Segment("deterministic"),)
+    max_staleness: int = 4           # steady-state SSP gate (>= 1)
+    staleness_decay: float = 0.9
+    delay_seed: int = 0              # keys the per-segment draw streams
+    merge_cost: Optional[float] = None   # None: 0.5 * mean cycle / M
+    shed: bool = True
+    backlog_high: int = 8            # enter degraded mode above this
+    backlog_low: int = 2             # recover at/below this
+    degraded_staleness: int = 1      # tightened gate while degraded
+    ue_shed_frac: float = 0.25       # per-cohort UE shed while degraded
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0              # checkpoint cadence in events; 0=off
+    window: int = 64                 # rolling SLO window (latencies)
+
+    def __post_init__(self):
+        if self.max_staleness < 1:
+            raise ValueError("the service needs max_staleness >= 1 (the "
+                             "barrier cannot be tightened or relaxed live)")
+        if not (1 <= self.degraded_staleness <= self.max_staleness):
+            raise ValueError("need 1 <= degraded_staleness <= max_staleness")
+        if self.backlog_low >= self.backlog_high:
+            raise ValueError("need backlog_low < backlog_high")
+        if not (0.0 <= self.ue_shed_frac < 1.0):
+            raise ValueError("need 0 <= ue_shed_frac < 1")
+        if not self.segments:
+            raise ValueError("need at least one traffic segment")
+        for s in self.segments[:-1]:
+            if not (math.isfinite(s.duration) and s.duration > 0):
+                raise ValueError(f"non-final segment duration must be "
+                                 f"finite and positive, got {s.duration}")
+        for s in self.segments:
+            stochastic.scenario(s.scenario)      # raises on unknown names
+            if not (s.load > 0 and math.isfinite(s.load)):
+                raise ValueError(f"segment load must be finite and "
+                                 f"positive, got {s.load}")
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["segments"] = [list(dataclasses.astuple(s)) for s in self.segments]
+        return json.dumps(d, sort_keys=True)
+
+
+@dataclasses.dataclass
+class _Job:
+    """A queued cloud merge: edge ``edge``'s cycle ``cycle`` arrived at
+    ``t_arr`` (departed ``t_dep``) with engine staleness ``stale``;
+    ``applied_at_arr`` counts merges already published when it arrived
+    (queue lag adds to the effective staleness).  ``row`` is the edge's
+    eq. 6 mean (F_hot,) f32; ``mass`` its aggregation weight."""
+    t_arr: float
+    t_dep: float
+    edge: int
+    cycle: int
+    stale: int
+    applied_at_arr: int
+    mass: float
+    row: np.ndarray
+
+
+class HFLService:
+    """Always-on control plane over an async ``HFLSimulator``.
+
+    ``sim`` must be ``mode="async"`` with ``schedule.problem`` set (the
+    delay draws need the eq. 1-5/8 ingredients) and
+    ``max_staleness == config.max_staleness``.  The service owns the
+    published cloud vector ``g`` (host float32); the simulator's flat
+    buffer carries the per-UE replicas it trains on departures.
+    """
+
+    def __init__(self, sim, config: ServiceConfig):
+        if sim.mode != "async":
+            raise ValueError("HFLService needs an HFLSimulator built with "
+                             "mode='async'")
+        if sim.schedule.problem is None:
+            raise ValueError("HFLService needs schedule.problem to draw "
+                             "cycle times (eqs. 1-5, 8)")
+        if sim.max_staleness != config.max_staleness:
+            raise ValueError(
+                f"simulator max_staleness={sim.max_staleness} != config "
+                f"max_staleness={config.max_staleness}; build them to agree")
+        self.sim = sim
+        self.config = config
+        sched = sim.schedule
+        assoc = np.asarray(sched.assoc)
+        self.active = np.flatnonzero(assoc.sum(0) > 0)
+        self.M_act = int(self.active.size)
+        self.w_total = float(np.asarray(sim._hot_weights,
+                                        np.float64).sum())
+
+        # Per-segment replay-stable draw streams: segment i samples under
+        # fold_in(delay_seed, i), chunked so resume never re-draws the
+        # consumed prefix (stochastic.CycleTimeSource).
+        base = stochastic.ensure_key(config.delay_seed)
+        self._sources = [
+            stochastic.CycleTimeSource(
+                stochastic.scenario(s.scenario).model,
+                jax.random.fold_in(base, i), sched.problem, assoc,
+                sched.a, sched.b)
+            for i, s in enumerate(config.segments)]
+        self._seg_ends = list(np.cumsum(
+            [s.duration for s in config.segments]))
+
+        if config.merge_cost is not None:
+            self.merge_cost = float(config.merge_cost)
+        else:
+            det = delay_lib.edge_cycle_time(sched.problem, assoc,
+                                            sched.a, sched.b)[self.active]
+            self.merge_cost = 0.5 * float(np.mean(det)) / self.M_act
+
+        self.engine = events.AsyncEngine(
+            self.M_act, self._cost, quota=None,
+            max_staleness=config.max_staleness)
+
+        # -- mutable control-plane state (everything a checkpoint holds) --
+        self.g = np.asarray(jax.device_get(sim.cloud_vector()),
+                            np.float32)
+        self.queue: List[_Job] = []
+        self.busy_until = 0.0
+        self.clock = 0.0                 # last processed event time
+        self.events_done = 0             # engine update events processed
+        self.applied = 0                 # merges published into g
+        self.shed_jobs = 0               # queued merges dropped
+        self.degraded = False
+        self._dep_t: Dict[Tuple[int, int], float] = {}
+        self.latencies: List[float] = []
+        self.backlog_seen: List[int] = []
+        self.trace: List[dict] = []
+        self.ckpt_wall = 0.0             # seconds spent checkpointing
+        self.run_wall = 0.0              # seconds spent in run()
+        self._ckpt_count = 0
+
+        # Replay the engine's initial departures (every edge departs
+        # cycle 1 at t=0) so the flat buffer holds cycle-1 results.
+        for d in self.engine.departures:
+            self._dep_t[(int(d.edge), int(d.cycle))] = float(d.t)
+        self._replay_wave([(d.edge, d.t) for d in self.engine.departures])
+
+    # -- traffic ---------------------------------------------------------
+
+    def _seg_at(self, t: float) -> int:
+        return min(bisect.bisect_right(self._seg_ends, t),
+                   len(self._seg_ends) - 1)
+
+    def _cost(self, m_eng: int, cycle: int, t: float) -> float:
+        """Engine cost callable: scenario draw / load of the segment the
+        departure falls in.  Pure in (m_eng, cycle, t) given the config —
+        the property checkpoint/resume determinism rests on."""
+        i = self._seg_at(t)
+        row = self._sources[i].row(cycle - 1)
+        return float(row[self.active[m_eng]]) / self.config.segments[i].load
+
+    # -- model replay ----------------------------------------------------
+
+    def _shed_mask(self, cohorts: np.ndarray) -> Optional[np.ndarray]:
+        """Degraded-mode UE participation mask over hot rows: within each
+        departing cohort, drop the lowest-weight ``ue_shed_frac`` of the
+        members (ties by row index; at least one survivor).  Mass is
+        preserved downstream by ``survivor_weights``."""
+        frac = self.config.ue_shed_frac
+        if not self.degraded or frac <= 0.0:
+            return None
+        w = np.asarray(self.sim._hot_weights, np.float64)
+        gids = np.asarray(self.sim._hot_gids)
+        ue_ok = np.ones(gids.shape[0], dtype=bool)
+        for m in np.unique(gids[cohorts]):
+            rows = np.flatnonzero(cohorts & (gids == m))
+            k = min(int(frac * rows.size), rows.size - 1)
+            if k > 0:
+                order = np.lexsort((rows, w[rows]))
+                ue_ok[rows[order[:k]]] = False
+        return ue_ok
+
+    def _replay_wave(self, departs: List[Tuple[int, float]]) -> None:
+        """Train the departing cohorts from the published model: one
+        ``replay_departure`` wave re-seeds their rows from ``g`` and runs
+        the b-iteration edge cycle in place."""
+        if not departs:
+            return
+        gids = np.asarray(self.sim._hot_gids)
+        cohorts = np.zeros(gids.shape[0], dtype=bool)
+        for m_eng, _t in departs:
+            cohorts |= gids == int(self.active[m_eng])
+        g_dev = self.sim.place_cloud_vector(self.g)
+        self.sim.replay_departure(g_dev, cohorts,
+                                  ue_ok=self._shed_mask(cohorts))
+
+    # -- cloud merge queue ----------------------------------------------
+
+    def _apply(self, job: _Job, finish: float) -> None:
+        """Publish one merge: staleness = engine lag at arrival + merges
+        applied while queued; update rule mirrors
+        ``aggregate.flat_staleness_merge`` with the job's mass as the
+        arrived weight (the cohort rows all hold the edge mean, so the
+        row IS the cohort's weighted contribution)."""
+        stale = job.stale + (self.applied - job.applied_at_arr)
+        lam = np.float32(job.mass *
+                         self.config.staleness_decay ** stale /
+                         self.w_total)
+        self.g = (np.float32(1.0) - lam) * self.g + lam * job.row
+        self.applied += 1
+        lat = finish - job.t_dep
+        self.latencies.append(lat)
+        self.trace.append(dict(kind="merge", t=finish, edge=job.edge,
+                               cycle=job.cycle, stale=int(stale),
+                               latency=lat, backlog=len(self.queue)))
+
+    def _drain(self, t: float) -> None:
+        """Serve the FIFO queue up to simulated time ``t``: every job
+        whose ``merge_cost`` service completes by ``t`` publishes."""
+        while self.queue:
+            start = max(self.queue[0].t_arr, self.busy_until)
+            finish = start + self.merge_cost
+            if finish > t:
+                break
+            job = self.queue.pop(0)
+            self.busy_until = finish
+            self._apply(job, finish)
+
+    def _shed_excess(self, t: float) -> None:
+        """Degraded-mode backlog cut: drop the lowest-(mass, arrival,
+        edge) queued jobs — never the in-service head — until the backlog
+        is back at ``backlog_high``."""
+        while len(self.queue) > self.config.backlog_high:
+            idx = min(range(1, len(self.queue)),
+                      key=lambda i: (self.queue[i].mass,
+                                     self.queue[i].t_arr,
+                                     self.queue[i].edge))
+            job = self.queue.pop(idx)
+            self.shed_jobs += 1
+            self.trace.append(dict(kind="shed", t=t, edge=job.edge,
+                                   cycle=job.cycle, mass=job.mass))
+
+    def _update_watermarks(self, t: float) -> None:
+        if not self.config.shed:
+            return
+        depth = len(self.queue)
+        if depth > self.config.backlog_high:
+            if not self.degraded:
+                self.degraded = True
+                self.engine.max_staleness = self.config.degraded_staleness
+                self.trace.append(dict(kind="degraded", t=t, on=True,
+                                       backlog=depth))
+            self._shed_excess(t)
+        elif self.degraded and depth <= self.config.backlog_low:
+            self.degraded = False
+            self.engine.max_staleness = self.config.max_staleness
+            self.trace.append(dict(kind="degraded", t=t, on=False,
+                                   backlog=depth))
+
+    # -- event loop ------------------------------------------------------
+
+    def _process(self, records: List[tuple]) -> None:
+        """Handle one engine step's trace records in order: drain the
+        queue to the event time, enqueue the arrival's merge job (payload
+        captured BEFORE any re-depart overwrites the cohort rows), run
+        the watermark logic, then train the step's departures as one
+        wave seeded from the currently-published model."""
+        departs: List[Tuple[int, float]] = []
+        for kind, ev in records:
+            if kind == "depart":
+                self._dep_t[(int(ev.edge), int(ev.cycle))] = float(ev.t)
+                departs.append((int(ev.edge), float(ev.t)))
+                self.clock = max(self.clock, float(ev.t))
+            elif kind == "update":
+                t = float(ev.t)
+                self._drain(t)
+                for m_eng, c, s in ev.merges:
+                    m_full = int(self.active[m_eng])
+                    row = np.asarray(
+                        jax.device_get(self.sim.edge_mean_row(m_full)),
+                        np.float32)
+                    self.queue.append(_Job(
+                        t_arr=t,
+                        t_dep=self._dep_t.pop((int(m_eng), int(c))),
+                        edge=m_full, cycle=int(c), stale=int(s),
+                        applied_at_arr=self.applied,
+                        mass=self.sim.edge_mass(m_full), row=row))
+                self.backlog_seen.append(len(self.queue))
+                self._update_watermarks(t)
+                self.clock = max(self.clock, t)
+                self.events_done += 1
+        if departs:
+            self._drain(max(t for _, t in departs))
+            self._replay_wave(departs)
+
+    def run(self, max_updates: int, verbose: bool = False) -> dict:
+        """Process engine events until ``events_done`` reaches
+        ``max_updates`` (cumulative across resumes), checkpointing every
+        ``ckpt_every`` events.  Returns ``summary()``."""
+        cfg = self.config
+        wall0 = time.perf_counter()
+        try:
+            while self.events_done < max_updates:
+                self._process(self.engine.step())
+                if (cfg.ckpt_every and cfg.ckpt_dir and
+                        self.events_done % cfg.ckpt_every == 0):
+                    self.checkpoint()
+                if verbose and self.events_done % 50 == 0:
+                    s = self.summary()
+                    print(f"[service] ev={self.events_done:5d} "
+                          f"t={self.clock:9.2f}s p95={s['p95']:.3f}s "
+                          f"backlog={len(self.queue)} "
+                          f"shed={self.shed_jobs}")
+        finally:
+            self.run_wall += time.perf_counter() - wall0
+        # The backlog is deliberately NOT drained here: the service is
+        # always-on, and a checkpoint taken now must describe the same
+        # mid-flight state an uninterrupted run carries past this event
+        # (crash-resume parity).  Call ``drain()`` at real shutdown.
+        if (cfg.ckpt_every and cfg.ckpt_dir and
+                self.events_done % cfg.ckpt_every != 0):
+            self.checkpoint()        # final state (cadence didn't just)
+        return self.summary()
+
+    def drain(self) -> dict:
+        """Terminal shutdown: publish the whole remaining backlog at its
+        natural service-completion times and return ``summary()``."""
+        self._drain(math.inf)
+        return self.summary()
+
+    # -- SLO metrics -----------------------------------------------------
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.latencies, np.float64)
+        roll = lat[-self.config.window:]
+        total = self.applied + self.shed_jobs
+        return dict(
+            events=self.events_done, applied=self.applied,
+            shed=self.shed_jobs,
+            shed_frac=self.shed_jobs / total if total else 0.0,
+            makespan=self.clock,
+            p50=float(np.percentile(lat, 50)) if lat.size else 0.0,
+            p95=float(np.percentile(lat, 95)) if lat.size else 0.0,
+            rolling_p50=float(np.percentile(roll, 50)) if roll.size else 0.0,
+            rolling_p95=float(np.percentile(roll, 95)) if roll.size else 0.0,
+            backlog_peak=int(max(self.backlog_seen, default=0)),
+            merge_cost=self.merge_cost,
+            run_wall=self.run_wall, ckpt_wall=self.ckpt_wall,
+            ckpt_overhead_frac=(self.ckpt_wall / self.run_wall
+                                if self.run_wall > 0 else 0.0),
+            updates_per_wall_sec=(self.events_done / self.run_wall
+                                  if self.run_wall > 0 else 0.0),
+        )
+
+    def global_params(self):
+        """The published cloud model as a parameter pytree."""
+        return self.sim.global_from_vector(self.g)
+
+    def to_jsonl(self, path: str) -> str:
+        """Versioned JSONL export of the service trace (header + one
+        record per line; see ``load_service_trace_jsonl``)."""
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(json.dumps({
+                "schema": SERVICE_TRACE_SCHEMA,
+                "version": SERVICE_TRACE_VERSION,
+                "num_records": len(self.trace),
+                "summary": self.summary(),
+            }) + "\n")
+            for rec in self.trace:
+                f.write(json.dumps(rec) + "\n")
+        return path
+
+    # -- durability ------------------------------------------------------
+
+    def _state_tree(self) -> dict:
+        q = self.queue
+        F = self.g.shape[0]
+        return {
+            "flat": self.sim.flat_state(),
+            "g": self.g.copy(),
+            "engine": self.engine.snapshot(),
+            "queue": {
+                "t_arr": np.asarray([j.t_arr for j in q], np.float64),
+                "t_dep": np.asarray([j.t_dep for j in q], np.float64),
+                "edge": np.asarray([j.edge for j in q], np.int64),
+                "cycle": np.asarray([j.cycle for j in q], np.int64),
+                "stale": np.asarray([j.stale for j in q], np.int64),
+                "applied_at_arr": np.asarray(
+                    [j.applied_at_arr for j in q], np.int64),
+                "mass": np.asarray([j.mass for j in q], np.float64),
+                "rows": (np.stack([j.row for j in q])
+                         if q else np.zeros((0, F), np.float32)),
+            },
+            "dep": {
+                "edge": np.asarray([e for e, _ in self._dep_t],
+                                   np.int64),
+                "cycle": np.asarray([c for _, c in self._dep_t],
+                                    np.int64),
+                "t": np.asarray(list(self._dep_t.values()), np.float64),
+            },
+            "svc": {
+                "busy_until": np.float64(self.busy_until),
+                "clock": np.float64(self.clock),
+                "events_done": np.int64(self.events_done),
+                "applied": np.int64(self.applied),
+                "shed_jobs": np.int64(self.shed_jobs),
+                "degraded": np.int64(self.degraded),
+                "ckpt_count": np.int64(self._ckpt_count),
+            },
+            "metrics": {
+                "latencies": np.asarray(self.latencies, np.float64),
+                "backlog_seen": np.asarray(self.backlog_seen, np.int64),
+            },
+            "trace_json": np.str_(json.dumps(self.trace)),
+        }
+
+    def checkpoint(self) -> str:
+        """Atomically persist the full control-plane state as
+        ``ckpt-<n>.npz`` under ``config.ckpt_dir``."""
+        if not self.config.ckpt_dir:
+            raise ValueError("config.ckpt_dir is unset")
+        t0 = time.perf_counter()
+        self._ckpt_count += 1
+        path = f"{self.config.ckpt_dir}/ckpt-{self._ckpt_count}.npz"
+        out = save_pytree(path, self._state_tree(), metadata={
+            "schema": SERVICE_CKPT_VERSION,
+            "config": self.config.to_json(),
+        })
+        dt = time.perf_counter() - t0
+        self.ckpt_wall += dt
+        self.trace.append(dict(kind="ckpt", t=self.clock,
+                               n=self._ckpt_count, wall=dt))
+        return out
+
+    def _restore_tree(self, tree: dict, meta: dict) -> None:
+        schema = int(np.asarray(meta["schema"]))
+        if schema != SERVICE_CKPT_VERSION:
+            raise CheckpointError(
+                f"service checkpoint schema {schema} != supported "
+                f"{SERVICE_CKPT_VERSION}")
+        echo = str(np.asarray(meta["config"]))
+        if echo != self.config.to_json():
+            raise CheckpointError(
+                "checkpoint was taken under a different service config; "
+                "resume with the exact config it was written with.\n"
+                f"  checkpoint: {echo}\n  this run:   "
+                f"{self.config.to_json()}")
+        self.sim.set_flat_state(np.asarray(tree["flat"], np.float32))
+        self.g = np.asarray(tree["g"], np.float32).copy()
+        self.engine.restore(tree["engine"])
+        q = tree["queue"]
+        rows = np.asarray(q["rows"], np.float32)
+        self.queue = [
+            _Job(t_arr=float(q["t_arr"][i]), t_dep=float(q["t_dep"][i]),
+                 edge=int(q["edge"][i]), cycle=int(q["cycle"][i]),
+                 stale=int(q["stale"][i]),
+                 applied_at_arr=int(q["applied_at_arr"][i]),
+                 mass=float(q["mass"][i]), row=rows[i].copy())
+            for i in range(int(np.asarray(q["edge"]).size))]
+        d = tree["dep"]
+        self._dep_t = {
+            (int(e), int(c)): float(t)
+            for e, c, t in zip(np.asarray(d["edge"]),
+                               np.asarray(d["cycle"]),
+                               np.asarray(d["t"]))}
+        svc = tree["svc"]
+        self.busy_until = float(np.asarray(svc["busy_until"]))
+        self.clock = float(np.asarray(svc["clock"]))
+        self.events_done = int(np.asarray(svc["events_done"]))
+        self.applied = int(np.asarray(svc["applied"]))
+        self.shed_jobs = int(np.asarray(svc["shed_jobs"]))
+        self.degraded = bool(int(np.asarray(svc["degraded"])))
+        self._ckpt_count = int(np.asarray(svc["ckpt_count"]))
+        m = tree["metrics"]
+        self.latencies = list(np.asarray(m["latencies"], np.float64))
+        self.backlog_seen = [int(x) for x in np.asarray(m["backlog_seen"])]
+        self.trace = json.loads(str(np.asarray(tree["trace_json"])))
+
+    def restore_latest(self) -> Optional[str]:
+        """Resume from the newest VALID checkpoint in ``config.ckpt_dir``.
+
+        Falls back through older checkpoints when the newest is
+        corrupted (``CheckpointError``); returns the path restored from,
+        or ``None`` when the directory holds no checkpoints (a fresh
+        start).  Raises if every candidate is damaged."""
+        if not self.config.ckpt_dir:
+            raise ValueError("config.ckpt_dir is unset")
+        paths = list_checkpoints(self.config.ckpt_dir)
+        if not paths:
+            return None
+        last_err: Optional[Exception] = None
+        for path in reversed(paths):
+            try:
+                tree, meta = load_pytree(path)
+            except CheckpointError as e:
+                last_err = e        # damaged file: fall back a generation
+                continue
+            # A schema/config mismatch applies to EVERY checkpoint in the
+            # directory — raise it rather than silently falling back.
+            self._restore_tree(tree, meta)
+            self.trace.append(dict(kind="resume", t=self.clock,
+                                   path=path))
+            return path
+        raise CheckpointError(
+            f"no readable checkpoint among {len(paths)} candidates in "
+            f"{self.config.ckpt_dir}") from last_err
+
+
+def load_service_trace_jsonl(path: str) -> Tuple[dict, List[dict]]:
+    """Load + validate a service trace export (mirrors
+    ``events.load_trace_jsonl`` for the service's schema)."""
+    with open(path, encoding="utf-8") as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    if not lines:
+        raise ValueError(f"{path}: empty trace file (no header line)")
+    header = json.loads(lines[0])
+    if header.get("schema") != SERVICE_TRACE_SCHEMA:
+        raise ValueError(f"{path}: not an {SERVICE_TRACE_SCHEMA} export "
+                         f"(schema={header.get('schema')!r})")
+    if header.get("version") != SERVICE_TRACE_VERSION:
+        raise ValueError(f"{path}: unknown service trace version "
+                         f"{header.get('version')!r}; this build reads "
+                         f"version {SERVICE_TRACE_VERSION} only")
+    records = [json.loads(ln) for ln in lines[1:]]
+    if len(records) != header.get("num_records"):
+        raise ValueError(f"{path}: truncated trace — header promises "
+                         f"{header.get('num_records')} records, file "
+                         f"holds {len(records)}")
+    return header, records
+
+
+def default_service_sim(num_ues: int = 24, num_edges: int = 4, *,
+                        max_staleness: int = 4,
+                        staleness_decay: float = 0.9, seed: int = 0):
+    """The standard service workload: the paper's planned schedule over
+    a synthetic logreg federation (the ``bench_faults`` setup), wrapped
+    in an async ``HFLSimulator`` ready for :class:`HFLService`."""
+    from repro.core import schedule as schedule_lib
+    from repro.core.problem import HFLProblem
+    from repro.data import partition, synthetic
+    from repro.fl.sim import HFLSimulator
+    from repro.models import lenet
+
+    prob = HFLProblem(num_edges=num_edges, num_ues=num_ues, seed=seed)
+    sch = schedule_lib.plan(prob)
+    n_train = int(prob.samples.sum())
+    train = synthetic.logreg_data(seed=seed, n=n_train, dim=12,
+                                  num_classes=4)
+    rng = np.random.default_rng(seed)
+    parts = partition.size_partition(rng, n_train,
+                                     prob.samples.astype(int))
+    ue_data = [{k: train[k][ix] for k in train} for ix in parts]
+    init = lenet.logreg_init(jax.random.PRNGKey(seed), 12, 4)
+
+    def loss_fn(p, b):
+        return lenet.logreg_loss(p, b, l2=1e-3)
+
+    return HFLSimulator(sch, loss_fn, init, ue_data, mode="async",
+                        max_staleness=max_staleness,
+                        staleness_decay=staleness_decay, seed=seed)
+
+
+def _parse_segments(spec: str) -> Tuple[Segment, ...]:
+    """``name:load:duration,...`` — duration ``inf`` allowed on the last."""
+    out = []
+    for part in spec.split(","):
+        bits = part.strip().split(":")
+        if len(bits) != 3:
+            raise ValueError(f"segment {part!r} is not name:load:duration")
+        out.append(Segment(bits[0], float(bits[1]), float(bits[2])))
+    return tuple(out)
+
+
+def main(argv=None) -> dict:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Always-on HFL control plane (crash-tolerant).")
+    ap.add_argument("--ues", type=int, default=24)
+    ap.add_argument("--edges", type=int, default=4)
+    ap.add_argument("--max-staleness", type=int, default=4)
+    ap.add_argument("--segments", default="deterministic:1.0:inf",
+                    help="name:load:duration,... (simulated seconds)")
+    ap.add_argument("--max-updates", type=int, default=200,
+                    help="stop after this many cloud events (cumulative)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest valid checkpoint first")
+    ap.add_argument("--no-shed", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="summary JSON path")
+    ap.add_argument("--trace", default=None, help="trace JSONL path")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = ServiceConfig(segments=_parse_segments(args.segments),
+                        max_staleness=args.max_staleness,
+                        delay_seed=args.seed, shed=not args.no_shed,
+                        ckpt_dir=args.ckpt_dir,
+                        ckpt_every=args.ckpt_every if args.ckpt_dir else 0)
+    sim = default_service_sim(args.ues, args.edges,
+                              max_staleness=args.max_staleness,
+                              seed=args.seed)
+    svc = HFLService(sim, cfg)
+    if args.resume:
+        src = svc.restore_latest()
+        print(f"[service] resumed from {src}" if src else
+              "[service] no checkpoint found; fresh start")
+    svc.run(args.max_updates, verbose=args.verbose)
+    summary = svc.drain()       # resumable checkpoints are already on disk
+    print(json.dumps(summary, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=2)
+    if args.trace:
+        svc.to_jsonl(args.trace)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

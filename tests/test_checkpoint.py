@@ -1,0 +1,128 @@
+"""Durable checkpointing (PR 7): atomic writes, corruption handling,
+cadence discovery, nested-pytree round-trips, and the sharded-restore
+path under a forced 8-device host (subprocess, same harness as
+test_fl_shard)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointError, latest_checkpoint,
+                              list_checkpoints, load_pytree, save_pytree)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_nested_roundtrip_with_none_and_metadata(tmp_path):
+    tree = {
+        "model": {"w": np.arange(12.0).reshape(3, 4),
+                  "b": np.zeros(4, np.float32),
+                  "frozen": None},
+        "layers": [{"k": np.ones(2)}, {"k": np.full(2, 2.0)}, None],
+        "step": np.asarray(7, np.int64),
+    }
+    path = save_pytree(str(tmp_path / "ck"), tree,
+                       metadata={"round": 3, "tag": "svc"})
+    out, meta = load_pytree(path)
+    assert out["model"]["frozen"] is None
+    assert out["layers"][2] is None
+    np.testing.assert_array_equal(out["model"]["w"], tree["model"]["w"])
+    np.testing.assert_array_equal(out["layers"][1]["k"], [2.0, 2.0])
+    assert int(out["step"]) == 7
+    assert int(meta["round"]) == 3 and str(meta["tag"]) == "svc"
+
+
+def test_save_is_atomic_no_tmp_orphan(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save_pytree(path, {"x": np.ones(3)})
+    assert os.path.exists(path)
+    assert not os.path.exists(path + ".tmp")
+    # overwrite in place: still exactly one file, new contents
+    save_pytree(path, {"x": np.full(3, 9.0)})
+    out, _ = load_pytree(path)
+    np.testing.assert_array_equal(out["x"], [9.0, 9.0, 9.0])
+    assert sorted(os.listdir(tmp_path)) == ["ck.npz"]
+
+
+def test_load_missing_vs_corrupted(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_pytree(str(tmp_path / "nope.npz"))
+    path = save_pytree(str(tmp_path / "ck"), {"x": np.arange(1000.0)})
+    blob = open(path, "rb").read()
+    # Truncation anywhere in the archive must surface as CheckpointError,
+    # not a raw zipfile traceback at first member access.
+    for cut in (10, len(blob) // 2, len(blob) - 8):
+        with open(path, "wb") as f:
+            f.write(blob[:cut])
+        with pytest.raises(CheckpointError, match="corrupted or truncated"):
+            load_pytree(path)
+    with open(path, "wb") as f:
+        f.write(b"not a zip archive at all")
+    with pytest.raises(CheckpointError):
+        load_pytree(path)
+
+
+def test_cadence_discovery_numeric_order(tmp_path):
+    d = str(tmp_path)
+    assert list_checkpoints(d) == []
+    assert latest_checkpoint(d) is None
+    for n in (1, 2, 10):      # lexicographic would put 10 before 2
+        save_pytree(os.path.join(d, f"ckpt-{n}"), {"n": np.asarray(n)})
+    save_pytree(os.path.join(d, "other-3"), {"n": np.asarray(0)})
+    open(os.path.join(d, "ckpt-4.npz.tmp"), "wb").close()   # crash orphan
+    names = [os.path.basename(p) for p in list_checkpoints(d)]
+    assert names == ["ckpt-1.npz", "ckpt-2.npz", "ckpt-10.npz"]
+    assert os.path.basename(latest_checkpoint(d)) == "ckpt-10.npz"
+    assert [os.path.basename(p) for p in
+            list_checkpoints(d, prefix="other-")] == ["other-3.npz"]
+    assert latest_checkpoint(str(tmp_path / "missing")) is None
+
+
+SHARDED_RESTORE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import sys; sys.path.insert(0, sys.argv[1])
+    tmp = sys.argv[2]
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import load_pytree, save_pytree
+    from repro.launch.mesh import make_agg_mesh
+
+    mesh = make_agg_mesh(2, 4)            # ('data', 'model') = (4, 2)
+    rng = np.random.default_rng(0)
+    tree = {"buf": jnp.asarray(rng.normal(0, 1, (8, 64)), jnp.float32),
+            "vec": jnp.asarray(rng.normal(0, 1, (64,)), jnp.float32)}
+    sharded = {
+        "buf": jax.device_put(tree["buf"],
+                              NamedSharding(mesh, P("data", "model"))),
+        "vec": jax.device_put(tree["vec"],
+                              NamedSharding(mesh, P("model"))),
+    }
+    path = save_pytree(os.path.join(tmp, "ck"), sharded,
+                       metadata={"devices": jax.device_count()})
+    # restore onto the SAME sharding layout via a target tree
+    out, meta = load_pytree(path, target=sharded)
+    assert int(meta["devices"]) == 8
+    for k in tree:
+        got = out[k]
+        assert got.sharding.is_equivalent_to(sharded[k].sharding,
+                                             got.ndim), (k, got.sharding)
+        np.testing.assert_array_equal(np.asarray(jax.device_get(got)),
+                                      np.asarray(tree[k]))
+    # and structurally (host numpy) for a cold reader with no mesh
+    host, _ = load_pytree(path)
+    np.testing.assert_array_equal(host["buf"], np.asarray(tree["buf"]))
+    print("OK sharded restore")
+""")
+
+
+def test_sharded_restore_8_devices(tmp_path):
+    r = subprocess.run(
+        [sys.executable, "-c", SHARDED_RESTORE_SCRIPT, SRC, str(tmp_path)],
+        capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK sharded restore" in r.stdout

@@ -135,3 +135,110 @@ def test_refined_async_makespan_objective():
     assert (A.sum(1) == 1).all()
     with pytest.raises(ValueError):
         assoc_lib.refined(prob, objective="nonsense")
+
+
+# ---------------------------------------------------------------------------
+# Steppable AsyncEngine: simulate_async parity, snapshot/restore, JSONL.
+# ---------------------------------------------------------------------------
+
+
+def _drive(eng):
+    while not eng.done:
+        eng.step()
+    return eng
+
+
+def test_engine_snapshot_resume_bit_identical():
+    """Snapshot at EVERY event boundary; a fresh engine restored from it
+    must finish with the exact trace suffix and timestamps."""
+    rng = np.random.default_rng(3)
+    ct = rng.uniform(0.5, 4.0, (16, 5))
+
+    def cost(m, c, t):
+        return ct[c - 1, m]
+
+    ref = _drive(events.AsyncEngine(5, cost, quota=5 * 3, max_staleness=2))
+    n_steps = len([1 for _ in ref.trace])
+    assert n_steps > 0
+
+    live = events.AsyncEngine(5, cost, quota=5 * 3, max_staleness=2)
+    boundary = 0
+    while not live.done:
+        snap = live.snapshot()
+        fresh = events.AsyncEngine(5, cost, quota=5 * 3, max_staleness=2)
+        fresh.restore(snap)
+        assert fresh.trace == []          # accumulators cleared
+        _drive(fresh)
+        # suffix of the reference trace from this boundary on
+        done_so_far = len(live.trace)
+        assert fresh.trace == ref.trace[done_so_far:], boundary
+        live.step()
+        boundary += 1
+    assert live.trace == ref.trace
+
+
+def test_engine_matches_simulate_async_and_mutable_gate():
+    cycles = np.asarray([1.0, 2.0, 6.0])
+    tl = events.simulate_async(cycles, rounds=4, max_staleness=2)
+    eng = events.AsyncEngine(3, lambda m, c, t: cycles[m],
+                             quota=4 * 3, max_staleness=2)
+    _drive(eng)
+    assert eng.trace == tl.trace
+    # tightening the gate mid-run only slows fast edges, never crashes,
+    # and the delivered quota still fills
+    eng2 = events.AsyncEngine(3, lambda m, c, t: cycles[m],
+                              quota=4 * 3, max_staleness=3)
+    for _ in range(5):
+        eng2.step()
+    eng2.max_staleness = 1
+    _drive(eng2)
+    assert eng2.delivered == 12
+    lead = max(s for u in eng2.updates[5:] for _, _, s in u.merges)
+    assert lead <= 3 * (1 + 1) + 3   # bounded after the tighten
+
+
+def test_engine_snapshot_version_rejected():
+    eng = events.AsyncEngine(2, lambda m, c, t: 1.0, quota=4,
+                             max_staleness=1)
+    snap = eng.snapshot()
+    snap["version_tag"] = np.int64(99)
+    with pytest.raises(ValueError, match="snapshot version"):
+        events.AsyncEngine(2, lambda m, c, t: 1.0, quota=4,
+                           max_staleness=1).restore(snap)
+
+
+def test_trace_jsonl_roundtrip_and_validation(tmp_path):
+    tl = events.simulate_async([1.0, 2.5, 4.0], rounds=3, max_staleness=1)
+    path = str(tmp_path / "trace.jsonl")
+    tl.to_jsonl(path)
+    header, records = events.load_trace_jsonl(path)
+    assert header["schema"] == events.TRACE_SCHEMA
+    assert header["version"] == events.TRACE_VERSION
+    assert header["num_records"] == len(tl.trace) == len(records)
+    assert header["makespan"] == pytest.approx(tl.makespan)
+    kinds = [r["kind"] for r in records]
+    assert kinds == [k for k, _ in tl.trace]
+    ups = [r for r in records if r["kind"] == "update"]
+    assert [tuple(map(tuple, r["merges"])) for r in ups] == \
+        [u.merges for u in tl.updates]
+
+    # foreign schema / unknown version / truncation all rejected
+    lines = open(path).read().splitlines()
+    import json as _json
+    hdr = _json.loads(lines[0])
+    bad = dict(hdr, schema="something-else")
+    (tmp_path / "bad1.jsonl").write_text(
+        "\n".join([_json.dumps(bad)] + lines[1:]))
+    with pytest.raises(ValueError, match="not an"):
+        events.load_trace_jsonl(str(tmp_path / "bad1.jsonl"))
+    bad = dict(hdr, version=99)
+    (tmp_path / "bad2.jsonl").write_text(
+        "\n".join([_json.dumps(bad)] + lines[1:]))
+    with pytest.raises(ValueError, match="unknown trace schema version"):
+        events.load_trace_jsonl(str(tmp_path / "bad2.jsonl"))
+    (tmp_path / "bad3.jsonl").write_text("\n".join(lines[:-2]))
+    with pytest.raises(ValueError, match="truncated"):
+        events.load_trace_jsonl(str(tmp_path / "bad3.jsonl"))
+    (tmp_path / "bad4.jsonl").write_text("")
+    with pytest.raises(ValueError, match="empty"):
+        events.load_trace_jsonl(str(tmp_path / "bad4.jsonl"))

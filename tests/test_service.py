@@ -1,0 +1,235 @@
+"""Always-on HFL control plane (repro.launch.service): determinism,
+durable checkpoint/resume (in-process and under a real SIGKILL),
+overload shedding, config validation, trace export."""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointError, list_checkpoints
+from repro.launch.service import (HFLService, Segment, ServiceConfig,
+                                  default_service_sim,
+                                  load_service_trace_jsonl)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+UES, EDGES, S_MAX = 12, 3, 3
+
+
+def _sim():
+    return default_service_sim(UES, EDGES, max_staleness=S_MAX)
+
+
+def _cfg(**kw):
+    kw.setdefault("segments", (Segment("iid_campus", 1.0, 40.0),
+                               Segment("iid_campus", 4.0, 40.0),
+                               Segment("iid_campus", 1.0, float("inf"))))
+    kw.setdefault("max_staleness", S_MAX)
+    return ServiceConfig(**kw)
+
+
+def _merges(svc):
+    return [(round(r["t"], 9), r["edge"], r["cycle"], r["stale"])
+            for r in svc.trace if r["kind"] == "merge"]
+
+
+def test_service_run_is_deterministic():
+    a = HFLService(_sim(), _cfg())
+    b = HFLService(_sim(), _cfg())
+    a.run(60)
+    b.run(60)
+    assert _merges(a) == _merges(b)
+    np.testing.assert_array_equal(a.g, b.g)
+    assert a.summary()["applied"] == b.summary()["applied"]
+
+
+def test_checkpoint_resume_matches_uninterrupted(tmp_path):
+    """Stop at an event boundary, resume in a FRESH service from disk:
+    the merge trace continues exactly and the model matches <= 1e-6."""
+    ref = HFLService(_sim(), _cfg())
+    ref.run(80)
+
+    cfg = _cfg(ckpt_dir=str(tmp_path), ckpt_every=10)
+    victim = HFLService(_sim(), cfg)
+    victim.run(40)                      # checkpoints at 10,20,30,40
+
+    resumed = HFLService(_sim(), cfg)
+    src = resumed.restore_latest()
+    assert src is not None and src.endswith("ckpt-4.npz")  # cadence writes
+    assert resumed.events_done == 40
+    resumed.run(80)
+
+    assert _merges(resumed) == _merges(ref)
+    assert float(np.abs(resumed.g - ref.g).max()) <= 1e-6
+    # the resumed trace records where it came back from
+    assert any(r["kind"] == "resume" for r in resumed.trace)
+
+
+def test_restore_falls_back_over_corrupted_newest(tmp_path):
+    cfg = _cfg(ckpt_dir=str(tmp_path), ckpt_every=10)
+    svc = HFLService(_sim(), cfg)
+    svc.run(25)                             # ckpts at 10, 20 + final at 25
+    paths = list_checkpoints(str(tmp_path))
+    assert len(paths) == 3
+    with open(paths[-1], "r+b") as f:       # damage the newest
+        f.truncate(100)
+    fresh = HFLService(_sim(), cfg)
+    src = fresh.restore_latest()
+    assert src == paths[-2]                 # fell back one generation
+    assert fresh.events_done == 20
+
+    for p in paths[:-1]:                    # damage ALL remaining
+        with open(p, "r+b") as f:
+            f.truncate(50)
+    with pytest.raises(CheckpointError, match="no readable checkpoint"):
+        HFLService(_sim(), cfg).restore_latest()
+
+
+def test_restore_rejects_foreign_config(tmp_path):
+    cfg = _cfg(ckpt_dir=str(tmp_path), ckpt_every=10)
+    HFLService(_sim(), cfg).run(10)
+    other = _cfg(ckpt_dir=str(tmp_path), ckpt_every=10, delay_seed=7)
+    with pytest.raises(CheckpointError, match="different service config"):
+        HFLService(_sim(), other).restore_latest()
+
+
+def test_shedding_bounds_backlog_and_latency():
+    """Under a sustained 4x burst the shedding service keeps the backlog
+    at the high watermark and its burst p95 near steady-state, while the
+    no-shedding twin's queue (and latency) grow without bound."""
+    budget = 150
+    shed = HFLService(_sim(), _cfg(shed=True))
+    noshed = HFLService(_sim(), _cfg(shed=False))
+    s1 = shed.run(budget)
+    s2 = noshed.run(budget)
+
+    assert s1["shed"] > 0 and s1["shed_frac"] > 0
+    assert s2["shed"] == 0
+    assert s1["backlog_peak"] <= shed.config.backlog_high + 1
+    assert s2["backlog_peak"] > 2 * shed.config.backlog_high
+
+    def burst_p95(svc):
+        lat = [r["latency"] for r in svc.trace
+               if r["kind"] == "merge" and r["t"] >= 40.0]
+        return float(np.percentile(lat, 95))
+
+    steady = [r["latency"] for r in shed.trace
+              if r["kind"] == "merge" and r["t"] < 40.0]
+    steady_p95 = float(np.percentile(steady, 95))
+    assert burst_p95(shed) <= 1.5 * steady_p95
+    assert burst_p95(noshed) > 1.5 * steady_p95
+
+    # degraded mode toggled on (and the gate actually tightened)
+    flips = [r for r in shed.trace if r["kind"] == "degraded"]
+    assert flips and flips[0]["on"] is True
+    assert min(shed.engine.max_staleness,
+               shed.config.degraded_staleness) == \
+        shed.config.degraded_staleness
+
+
+def test_shedding_is_deterministic_and_mass_preserving():
+    a = HFLService(_sim(), _cfg(shed=True))
+    b = HFLService(_sim(), _cfg(shed=True))
+    a.run(120)
+    b.run(120)
+    assert _merges(a) == _merges(b)
+    sheds = [(r["t"], r["edge"], r["cycle"]) for r in a.trace
+             if r["kind"] == "shed"]
+    assert sheds == [(r["t"], r["edge"], r["cycle"]) for r in b.trace
+                     if r["kind"] == "shed"]
+    np.testing.assert_array_equal(a.g, b.g)
+    # survivor re-weighting keeps every applied merge's mass the full
+    # cohort weight (mass preservation), so the model can't blow up
+    assert np.isfinite(a.g).all()
+
+
+def test_service_trace_jsonl_roundtrip(tmp_path):
+    svc = HFLService(_sim(), _cfg())
+    svc.run(30)
+    path = svc.to_jsonl(str(tmp_path / "svc.jsonl"))
+    header, records = load_service_trace_jsonl(path)
+    assert header["num_records"] == len(svc.trace) == len(records)
+    assert header["summary"]["applied"] == svc.summary()["applied"]
+    assert [r["kind"] for r in records] == [r["kind"] for r in svc.trace]
+
+    lines = open(path).read().splitlines()
+    hdr = json.loads(lines[0])
+    (tmp_path / "bad.jsonl").write_text(
+        "\n".join([json.dumps(dict(hdr, version=99))] + lines[1:]))
+    with pytest.raises(ValueError, match="unknown service trace version"):
+        load_service_trace_jsonl(str(tmp_path / "bad.jsonl"))
+    (tmp_path / "trunc.jsonl").write_text("\n".join(lines[:-1]))
+    with pytest.raises(ValueError, match="truncated"):
+        load_service_trace_jsonl(str(tmp_path / "trunc.jsonl"))
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="max_staleness >= 1"):
+        ServiceConfig(max_staleness=0)
+    with pytest.raises(ValueError, match="degraded_staleness"):
+        ServiceConfig(max_staleness=2, degraded_staleness=3)
+    with pytest.raises(ValueError, match="backlog_low"):
+        ServiceConfig(backlog_low=8, backlog_high=8)
+    with pytest.raises(ValueError, match="unknown scenario"):
+        ServiceConfig(segments=(Segment("nope"),))
+    with pytest.raises(ValueError, match="non-final segment"):
+        ServiceConfig(segments=(Segment("deterministic", 1.0, float("inf")),
+                                Segment("deterministic", 1.0, 10.0)))
+    with pytest.raises(ValueError, match="load"):
+        ServiceConfig(segments=(Segment("deterministic", -1.0),))
+    sim = _sim()
+    with pytest.raises(ValueError, match="max_staleness"):
+        HFLService(sim, ServiceConfig(max_staleness=S_MAX + 1))
+
+
+VICTIM_SCRIPT = textwrap.dedent("""
+    import sys
+    sys.path.insert(0, sys.argv[1])
+    from repro.launch.service import (HFLService, Segment, ServiceConfig,
+                                      default_service_sim)
+    cfg = ServiceConfig(segments=(Segment("iid_campus", 1.0, 40.0),
+                                  Segment("iid_campus", 4.0, 40.0),
+                                  Segment("iid_campus", 1.0, float("inf"))),
+                        max_staleness=3, ckpt_dir=sys.argv[2], ckpt_every=5)
+    svc = HFLService(default_service_sim(12, 3, max_staleness=3), cfg)
+    svc.run(60)
+""")
+
+
+def test_sigkill_crash_resume_parity(tmp_path):
+    """A real kill -9 mid-run: resume from the surviving checkpoints and
+    match the uninterrupted reference's merge trace and final model."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    victim = subprocess.Popen(
+        [sys.executable, "-c", VICTIM_SCRIPT, SRC, str(tmp_path)],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.STDOUT)
+    deadline = time.time() + 300
+    try:
+        while len(list_checkpoints(str(tmp_path))) < 2:
+            assert victim.poll() is None, \
+                f"victim finished before the kill (rc={victim.returncode})"
+            assert time.time() < deadline, "no checkpoints appeared"
+            time.sleep(0.05)
+        victim.send_signal(signal.SIGKILL)
+        victim.wait(timeout=30)
+    finally:
+        if victim.poll() is None:
+            victim.kill()
+    assert victim.returncode == -signal.SIGKILL
+
+    cfg = _cfg(ckpt_dir=str(tmp_path), ckpt_every=5)
+    resumed = HFLService(_sim(), cfg)
+    assert resumed.restore_latest() is not None
+    assert resumed.events_done < 60
+    resumed.run(60)
+
+    ref = HFLService(_sim(), _cfg())
+    ref.run(60)
+    assert _merges(resumed) == _merges(ref)
+    assert float(np.abs(resumed.g - ref.g).max()) <= 1e-6
