@@ -1,0 +1,194 @@
+"""Benchmark: million-UE scale — sampling + streaming aggregation (PR 8).
+
+Sweeps the fleet size N with M=16 edges (full mode: 4096 / 65536 /
+1048576; ``--smoke``: 4096 only) and, per N:
+
+* times the scalable cluster association (``assoc.cluster_refined``) —
+  the k-means + cluster-swap + bounded-polish pipeline that replaces
+  ``refined``'s per-UE scan above N ~ 10^4;
+* draws weight-proportional cohorts at ``rate=0.1`` and prices a full
+  sync AND async run on ``iid_campus`` with the participation-masked
+  clock (an unsampled UE never paces its edge);
+* streams a synthetic ``(N, 1024)`` update matrix through
+  ``StreamingEdgeAccumulator`` in 8192-row keyed chunks — the (N, F)
+  buffer is NEVER materialized; the resident accumulator stays
+  ``M*F*4 + M*4`` bytes at every N (asserted equal across the sweep);
+* checks estimator quality once on a small fleet: the sampled final
+  loss at rate=0.1 lands within 2% of full participation.
+
+Results go to ``benchmarks/BENCH_scale.json``; assertion failures
+propagate through ``benchmarks.run`` to a non-zero exit (the CI smoke
+runs this module directly).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assoc, delay, schedule, stochastic
+from repro.core.problem import HFLProblem
+from repro.data import partition, synthetic
+from repro.fl import sampling
+from repro.fl.aggregate import StreamingEdgeAccumulator
+from repro.fl.sim import HFLSimulator
+from repro.models import lenet
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "BENCH_scale.json")
+
+M_EDGES = 16
+A_ITERS, B_ITERS = 10.0, 3
+ROUNDS = 5
+MAX_STALENESS = 2
+RATE = 0.1
+F_STREAM = 1024
+CHUNK_ROWS = 8192
+SWEEP_FULL = (4096, 65536, 1048576)
+SWEEP_SMOKE = (4096,)
+QUALITY_TOL = 0.02
+
+
+def _stream_case(n: int) -> dict:
+    """Fold a keyed synthetic (n, F_STREAM) matrix through the streaming
+    accumulator chunk by chunk; the full buffer never exists."""
+    rng = np.random.default_rng(0)
+    gid = rng.integers(0, M_EDGES, n)
+    w = rng.uniform(0.5, 2.0, n)
+    acc = StreamingEdgeAccumulator(M_EDGES, F_STREAM)
+    key = jax.random.PRNGKey(7)
+    t0 = time.perf_counter()
+    for i, start in enumerate(range(0, n, CHUNK_ROWS)):
+        stop = min(start + CHUNK_ROWS, n)
+        chunk = jax.random.normal(jax.random.fold_in(key, i),
+                                  (stop - start, F_STREAM), jnp.float32)
+        acc.add(chunk, w[start:stop], gid[start:stop])
+    means = np.asarray(acc.edge_means())
+    wall = time.perf_counter() - t0
+    assert np.all(np.isfinite(means))
+    return dict(
+        stream_wall_s=wall,
+        stream_rows_per_s=n / wall,
+        resident_accumulator_bytes=acc.resident_bytes(),
+        transient_chunk_bytes=CHUNK_ROWS * F_STREAM * 4,
+        full_buffer_bytes_avoided=n * F_STREAM * 4,
+    )
+
+
+def _scale_case(n: int) -> dict:
+    prob = HFLProblem(num_edges=M_EDGES, num_ues=n, seed=0)
+
+    t0 = time.perf_counter()
+    A = assoc.cluster_refined(prob, a=A_ITERS)
+    assoc_wall = time.perf_counter() - t0
+    latency = float(delay.association_latency(prob, A, A_ITERS))
+
+    sampler = sampling.make_sampler("weight", participation_rate=RATE)
+    weights = prob.samples.astype(np.float64)
+    gid = A.argmax(1)
+    part = sampler.sample_rounds(0, weights, gid, M_EDGES,
+                                 ROUNDS + MAX_STALENESS)
+    cohort = int(part[0].sum())
+
+    model = stochastic.scenario("iid_campus").model
+    draws_full = model.cycle_times(0, prob, A, A_ITERS, B_ITERS, ROUNDS)
+    draws_samp = model.cycle_times(0, prob, A, A_ITERS, B_ITERS, ROUNDS,
+                                   participation=part[:ROUNDS])
+    sync_full = float(draws_full.max(axis=1).sum())
+    sync_sampled = float(draws_samp.max(axis=1).sum())
+    # an unsampled UE never paces its edge; same key = common draws
+    assert sync_sampled <= sync_full + 1e-9, (sync_sampled, sync_full)
+
+    res = delay.async_completion(prob, A, A_ITERS, B_ITERS, rounds=ROUNDS,
+                                 max_staleness=MAX_STALENESS,
+                                 delay_model=model, key=0,
+                                 participation=part)
+    async_sampled = float(res["makespan"])
+    assert np.isfinite(async_sampled) and async_sampled > 0
+
+    out = dict(
+        n=n, m=M_EDGES, rate=RATE, rounds=ROUNDS,
+        assoc_wall_s=assoc_wall, assoc_latency_s=latency,
+        cohort_round0=cohort,
+        sync_makespan_full=sync_full, sync_makespan_sampled=sync_sampled,
+        async_makespan_sampled=async_sampled,
+        **_stream_case(n),
+    )
+    print(f"[scale] N={n:>7}: assoc {assoc_wall:6.1f}s  "
+          f"cohort {cohort}/{n}  sync {sync_sampled:9.1f}s "
+          f"(full {sync_full:9.1f}s)  async {async_sampled:9.1f}s  "
+          f"stream {out['stream_rows_per_s']:,.0f} rows/s  "
+          f"resident {out['resident_accumulator_bytes']:,} B")
+    return out
+
+
+def _quality_case() -> dict:
+    """Small-fleet estimator quality: final loss at rate=0.1 vs full."""
+    prob = HFLProblem(num_edges=4, num_ues=64, epsilon=0.25, seed=0,
+                      samples_lo=50, samples_hi=120)
+    sch = schedule.plan(prob)
+    n_train = int(prob.samples.sum())
+    train = synthetic.logreg_data(seed=0, n=n_train, dim=12, num_classes=4)
+    test = synthetic.logreg_data(seed=1, n=400, dim=12, num_classes=4)
+    rng = np.random.default_rng(0)
+    parts = partition.size_partition(rng, n_train, prob.samples.astype(int))
+    ue_data = [{k: train[k][ix] for k in train} for ix in parts]
+    init = lenet.logreg_init(jax.random.PRNGKey(0), 12, 4)
+
+    def loss(p, b):
+        return lenet.logreg_loss(p, b, l2=1e-3)
+
+    rounds = 10
+    full = HFLSimulator(sch, loss, init, ue_data, lr=0.02,
+                        solver="gd").run(test, rounds=rounds)
+    samp = HFLSimulator(sch, loss, init, ue_data, lr=0.02, solver="gd",
+                        sampler=sampling.make_sampler(
+                            "weight", participation_rate=RATE),
+                        sample_seed=0).run(test, rounds=rounds)
+    lf, ls = float(full.test_loss[-1]), float(samp.test_loss[-1])
+    rel = abs(ls - lf) / lf
+    print(f"[scale] quality: full loss {lf:.4f}  sampled {ls:.4f}  "
+          f"rel {rel:.3%}")
+    assert rel <= QUALITY_TOL, \
+        (f"sampled final loss must be within {QUALITY_TOL:.0%} of full "
+         f"participation", ls, lf, rel)
+    return dict(case="quality", rounds=rounds, rate=RATE,
+                full_loss=lf, sampled_loss=ls, rel_err=rel)
+
+
+def run(csv_rows: list, smoke: bool = False):
+    sweep = SWEEP_SMOKE if smoke else SWEEP_FULL
+    out = [_scale_case(n) for n in sweep]
+
+    resident = {c["resident_accumulator_bytes"] for c in out}
+    assert len(resident) == 1, \
+        ("resident aggregation-buffer bytes must be independent of N",
+         sorted(resident))
+
+    out.append(_quality_case())
+
+    for c in out[:-1]:
+        csv_rows.append(("scale", f"n{c['n']}", c["stream_wall_s"] * 1e6,
+                         f"rows/s={c['stream_rows_per_s']:,.0f};"
+                         f"resident={c['resident_accumulator_bytes']}"))
+    csv_rows.append(("scale", "quality", out[-1]["rel_err"] * 1e6,
+                     f"full={out[-1]['full_loss']:.4f};"
+                     f"sampled={out[-1]['sampled_loss']:.4f}"))
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[scale] wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="N=4096 only (CI); keeps all assertions")
+    args = ap.parse_args()
+    rows: list = []
+    run(rows, smoke=args.smoke)

@@ -18,8 +18,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from benchmarks import (bench_ablation, bench_association, bench_async,
                         bench_convergence, bench_faults, bench_iterations,
                         bench_kernels, bench_optimizer, bench_roofline,
-                        bench_service, bench_serving, bench_shard,
-                        bench_stochastic)
+                        bench_scale, bench_service, bench_serving,
+                        bench_shard, bench_stochastic)
 
 SUITES = {
     "iterations": bench_iterations.run,     # Figs. 2-3
@@ -35,6 +35,7 @@ SUITES = {
     "ablation": bench_ablation.run,         # beyond-paper ablations
     "serving": bench_serving.run,           # decode throughput (smoke)
     "service": bench_service.run,           # always-on control plane SLOs
+    "scale": bench_scale.run,               # million-UE sampling/streaming
 }
 
 

@@ -142,7 +142,7 @@ def edge_cycle_time(problem: HFLProblem, assoc: np.ndarray, a, b) -> np.ndarray:
 
 def async_completion(problem: HFLProblem, assoc: np.ndarray, a, b, *,
                      rounds: int, max_staleness: int,
-                     delay_model=None, key=0) -> dict:
+                     delay_model=None, key=0, participation=None) -> dict:
     """Event-driven async completion-time statistics vs. the eq. 34 bound.
 
     Simulates ``rounds * M_active`` edge->cloud deliveries (the same
@@ -169,14 +169,26 @@ def async_completion(problem: HFLProblem, assoc: np.ndarray, a, b, *,
     * ``edge_busy_frac``  — (M,) per-edge compute fraction (0 for inactive);
     * ``arrivals``        — (t, edge, cycle, staleness) per delivery, in
       global edge indices.
+
+    ``participation``: optional bool ``(rounds + max_staleness, N)`` (or
+    ``(N,)``) cohort masks (``repro.fl.sampling``) — each cycle's tau is
+    the member max over that cycle's participants only.  Requires a
+    ``delay_model`` (pass ``DeterministicDelays()`` for the paper's
+    constants with a sampled cohort); both the async cycles and the sync
+    reference use the SAME masked draws.
     """
     active = np.flatnonzero(np.asarray(assoc).sum(0) > 0)
+    if delay_model is None and participation is not None:
+        from repro.core import stochastic as _stochastic
+        delay_model = _stochastic.DeterministicDelays()
     if delay_model is None:
         cycles = edge_cycle_time(problem, assoc, a, b)[active]
         sync = float(rounds) * cloud_round_time(problem, assoc, a, b)
     else:
+        kw = {} if participation is None else {"participation": participation}
         draws = delay_model.cycle_times(key, problem, assoc, a, b,
-                                        int(rounds) + int(max_staleness))
+                                        int(rounds) + int(max_staleness),
+                                        **kw)
         cycles = np.asarray(draws)[:, active]
         sync = float(cycles[:int(rounds)].max(axis=1).sum())
     tl = events.simulate_async(cycles, rounds=int(rounds),

@@ -183,6 +183,28 @@ class AsyncTimeline:
         return max((s for u in self.updates for _, _, s in u.merges),
                    default=0)
 
+    def departure_waves(self) -> List[List[Departure]]:
+        """Group departures into ARRIVAL WAVES: the runs of consecutive
+        ``("depart", ...)`` records between cloud updates, in trace order.
+
+        A wave is the unit the streaming aggregation path folds — one
+        gather/accumulate pass per wave over only the departing cohorts'
+        rows (``repro.fl.aggregate.StreamingEdgeAccumulator``,
+        ``benchmarks/bench_scale.py``) — so no O(N·F) buffer is ever
+        resident no matter how many waves the trace carries.
+        """
+        waves: List[List[Departure]] = []
+        cur: List[Departure] = []
+        for kind, ev in self.trace:
+            if kind == "depart":
+                cur.append(ev)
+            elif kind == "update" and cur:
+                waves.append(cur)
+                cur = []
+        if cur:
+            waves.append(cur)
+        return waves
+
     # -- serialization ------------------------------------------------------
 
     def to_jsonl(self, path: str) -> str:

@@ -118,27 +118,51 @@ class DelayModel:
     # -- drivers ------------------------------------------------------------
 
     def edge_round_times(self, key, problem: HFLProblem, assoc, a,
-                         num_draws: int) -> np.ndarray:
-        """(num_draws, M) tau_m draws — eq. 33 over sampled ingredients."""
+                         num_draws: int, participation=None) -> np.ndarray:
+        """(num_draws, M) tau_m draws — eq. 33 over sampled ingredients.
+
+        ``participation`` (optional): a bool ``(N,)`` or ``(num_draws, N)``
+        cohort mask (``repro.fl.sampling``).  An unsampled UE never
+        uploads, so it cannot pace its edge: its per-round latency is
+        zeroed before the member max.  Positive latencies mean the max is
+        then taken over participants only (an edge whose whole cohort is
+        masked out reads 0, matching the inactive-edge convention).
+        """
         kc, ku = jax.random.split(ensure_key(key))
         per_ue = (jnp.asarray(a, jnp.float32) *
                   self.sample_compute(kc, problem, num_draws) +
                   self.sample_uplink(ku, problem, assoc, num_draws))
+        if participation is not None:
+            part = np.asarray(participation, bool)
+            if part.ndim == 1:
+                part = np.broadcast_to(part[None], (num_draws, part.shape[0]))
+            per_ue = per_ue * jnp.asarray(part, per_ue.dtype)
         return np.asarray(_segment_max(per_ue, np.asarray(assoc)), float)
 
     def cycle_times(self, key, problem: HFLProblem, assoc, a, b,
-                    num_draws: int) -> np.ndarray:
+                    num_draws: int, participation=None) -> np.ndarray:
         """(num_draws, M) per-cycle times ``sum_{j<b} tau^(j) + t_mc``.
 
         The ``b`` edge rounds of one cycle are drawn independently (each
         round re-fades and re-jitters) and summed; inactive edges stay 0.
         One batched draw covers every cycle of every edge — no per-edge
         Python, no per-wave resampling.
+
+        ``participation``: bool ``(N,)`` or per-cycle ``(num_draws, N)``
+        cohort masks; the ``b`` edge rounds of a cycle share that cycle's
+        mask (sampling is per cloud round).
         """
         kr, kb = jax.random.split(ensure_key(key))
         b = int(b)
+        part = None
+        if participation is not None:
+            p = np.asarray(participation, bool)
+            if p.ndim == 1:
+                p = np.broadcast_to(p[None], (num_draws, p.shape[0]))
+            part = np.repeat(p, b, axis=0)
         tau = jnp.asarray(self.edge_round_times(kr, problem, assoc, a,
-                                                num_draws * b))
+                                                num_draws * b,
+                                                participation=part))
         tau = tau.reshape(num_draws, b, problem.num_edges).sum(axis=1)
         t_mc = self.sample_backhaul(kb, problem, num_draws)
         active = jnp.asarray(np.asarray(assoc).sum(0) > 0)
@@ -155,15 +179,44 @@ class DeterministicDelays(DelayModel):
     reproduces the constant-delay traces event-for-event.
     """
 
-    def edge_round_times(self, key, problem, assoc, a, num_draws):
+    def edge_round_times(self, key, problem, assoc, a, num_draws,
+                         participation=None):
         del key
-        return np.tile(delay.edge_round_time(problem, np.asarray(assoc), a),
-                       (num_draws, 1))
+        if participation is None:
+            return np.tile(delay.edge_round_time(problem, np.asarray(assoc),
+                                                 a), (num_draws, 1))
+        return self._masked_tau(problem, np.asarray(assoc), a, num_draws,
+                                participation)
 
-    def cycle_times(self, key, problem, assoc, a, b, num_draws):
+    def cycle_times(self, key, problem, assoc, a, b, num_draws,
+                    participation=None):
         del key
-        return np.tile(delay.edge_cycle_time(problem, np.asarray(assoc),
-                                             a, b), (num_draws, 1))
+        assoc = np.asarray(assoc)
+        if participation is None:
+            return np.tile(delay.edge_cycle_time(problem, assoc, a, b),
+                           (num_draws, 1))
+        # Deterministic rounds: the b rounds of a cycle share the cycle's
+        # cohort mask and are identical, so the cycle is b * tau + t_mc.
+        tau = self._masked_tau(problem, assoc, a, num_draws, participation)
+        active = assoc.sum(0) > 0
+        t_mc = np.where(active, problem.t_edge_cloud(), 0.0)
+        return int(b) * tau + t_mc[None, :]
+
+    @staticmethod
+    def _masked_tau(problem, assoc, a, num_draws, participation):
+        """Float64-exact masked member max (numpy end to end)."""
+        per_ue = a * problem.t_cmp() + problem.t_com(assoc)          # (N,)
+        part = np.asarray(participation, bool)
+        if part.ndim == 1:
+            part = np.broadcast_to(part[None], (num_draws, part.shape[0]))
+        masked = per_ue[None, :] * part                              # (D, N)
+        M = assoc.shape[1]
+        gid = np.where(assoc.sum(1) > 0, assoc.argmax(1), M)
+        out = np.zeros((num_draws, M + 1))
+        rows = np.broadcast_to(np.arange(num_draws)[:, None], masked.shape)
+        cols = np.broadcast_to(gid[None, :], masked.shape)
+        np.maximum.at(out, (rows, cols), masked)
+        return out[:, :M]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -269,6 +269,33 @@ class ShardedFlatLayout:
         mask = jnp.asarray(self.perm >= 0, jnp.float32)
         return w[jnp.asarray(np.maximum(self.perm, 0))] * mask
 
+    def pad_mask(self, mask):
+        """Permute+pad a boolean per-row mask; pad rows get **False**.
+
+        ``pad_rows`` pads with row-0 copies — fine for latencies/ids whose
+        pad slots are weight-masked anyway, but a hazard for booleans: a
+        participation or survivor mask padded that way would mark a pad
+        row as "sampled" whenever UE 0 is.  This variant forces every pad
+        slot to False, so samplers and fault masks can never resurrect a
+        zero-weight pad row.  Accepts any array whose LEADING axis is
+        ``num_rows`` (matching ``pad_rows``).
+        """
+        idx = jnp.asarray(np.maximum(self.perm, 0))
+        keep = jnp.asarray(self.perm >= 0)
+        m = jnp.asarray(mask, bool)
+        return m[idx] & keep.reshape((-1,) + (1,) * (m.ndim - 1))
+
+    def gather_rows(self, buf, rows):
+        """Materialize only the cohort ``rows`` (padded-order indices) of a
+        padded buffer — the sampled-participation gather.  ``rows`` is a
+        host int array; the result is ``(len(rows), f_padded)``."""
+        return buf[jnp.asarray(np.asarray(rows, np.int64))]
+
+    def scatter_rows(self, buf, rows, values):
+        """Write cohort ``values`` back into the padded buffer at
+        ``rows`` (inverse of ``gather_rows``); other rows untouched."""
+        return buf.at[jnp.asarray(np.asarray(rows, np.int64))].set(values)
+
     # -- original-order round-trip --------------------------------------
 
     def ravel(self, stacked):

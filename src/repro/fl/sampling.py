@@ -1,0 +1,352 @@
+"""Per-round client sampling for partial participation (BEYOND-PAPER).
+
+The paper's eqs. 6/10 assume every UE uploads every edge round.  Real
+deployments at N=10^5-10^6 sample a cohort per round (HierFAVG's
+client-edge-cloud setting, arxiv 1905.06641).  This module draws the
+per-round participation masks; ``participation_weights`` reweights the
+sampled cohort so the edge/cloud weighted means stay unbiased.
+
+Design mirrors ``core/stochastic.py``: samplers are frozen dataclasses,
+every draw is a pure function of an integer seed (or jax PRNG key), and a
+whole run's masks come from ONE batched draw (``sample_rounds``) rather
+than a per-round loop.
+
+Selection is Gumbel-top-k within each edge: per (round, edge) we keep the
+``k_m = ceil(rate * n_m)`` eligible members with the largest
+``logits + Gumbel`` perturbations — exactly a Plackett-Luce draw without
+replacement, so ``logits = log w`` gives weight-proportional sampling and
+``logits = 0`` gives uniform.  Eligibility is strictly ``weight > 0``:
+zero-weight rows (``ShardedFlatLayout`` pad rows, masked-out UEs) get
+``-inf`` logits AND are masked out of the winner set, so their selection
+probability is exactly 0 (regression-tested in
+``tests/test_sampling_props.py``).
+
+Unbiasedness: rather than raw 1/p inverse-propensity factors (unbounded
+variance for small p), ``participation_weights`` uses the self-normalized
+estimator already shipped for faults — ``survivor_weights`` rescales the
+sampled members of each edge so their total mass equals the edge's full
+mass W_m *exactly*.  Eq. 6's edge mean becomes a ratio estimator of the
+full-participation mean (consistent, and exact whenever the cohort mean
+matches the population mean), and eq. 10 is untouched because every
+edge's mass is preserved.  Composing faults and sampling ANDs the masks
+*first* and renormalizes *once*, so the two never double-discount.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Type
+
+import jax
+import numpy as np
+
+from . import aggregate
+
+__all__ = [
+    "ClientSampler",
+    "UniformSampler",
+    "WeightProportionalSampler",
+    "ParetoSampler",
+    "SAMPLERS",
+    "make_sampler",
+    "participation_weights",
+]
+
+
+def _ensure_key(key):
+    if isinstance(key, (int, np.integer)):
+        return jax.random.PRNGKey(int(key))
+    return key
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientSampler:
+    """Base sampler: uniform-within-edge Gumbel-top-k draws.
+
+    ``participation_rate`` in (0, 1]; each nonempty edge keeps at least
+    ``min_per_edge`` members (so a sampled round never silences a live
+    edge and the mass-preserving reweighting is always well defined).
+    """
+
+    participation_rate: float = 0.1
+    min_per_edge: int = 1
+
+    name = "uniform"
+
+    def __post_init__(self):
+        if not (0.0 < float(self.participation_rate) <= 1.0):
+            raise ValueError(
+                f"participation_rate must be in (0, 1], got {self.participation_rate}"
+            )
+        if int(self.min_per_edge) < 1:
+            raise ValueError("min_per_edge must be >= 1")
+
+    # -- policy hook ---------------------------------------------------
+    def logits(self, key, weights: np.ndarray) -> np.ndarray:
+        """Per-UE selection log-propensities for ELIGIBLE rows.
+
+        Ineligible (zero-weight) rows are handled by the caller; the
+        returned array only needs to be finite on ``weights > 0``.
+        """
+        return np.zeros(weights.shape[0])
+
+    # -- public API ----------------------------------------------------
+    def is_full(self) -> bool:
+        """True when every eligible UE participates every round."""
+        return float(self.participation_rate) >= 1.0
+
+    def sample_rounds(self, key, weights, group_ids, num_groups, num_rounds):
+        """One batched draw of participation masks.
+
+        Returns a ``(num_rounds, N)`` bool array; row r is the cohort for
+        round r.  Pure in ``(key, weights, group_ids)`` — same inputs,
+        same masks (resume-stable, like ``CycleTimeSource``).
+        """
+        w = np.asarray(weights, np.float64)
+        gid = np.asarray(group_ids, np.int64)
+        num_rounds = int(num_rounds)
+        num_groups = int(num_groups)
+        n = w.shape[0]
+        eligible = w > 0
+        if self.is_full():
+            return np.tile(eligible, (num_rounds, 1))
+
+        key = _ensure_key(key)
+        base = np.asarray(self.logits(key, w), np.float64)
+        gum = np.asarray(
+            jax.random.gumbel(jax.random.fold_in(key, 1), (num_rounds, n)),
+            np.float64,
+        )
+        z = np.where(eligible[None, :], base[None, :] + gum, -np.inf)
+
+        n_m = np.bincount(gid[eligible], minlength=num_groups)
+        k_m = np.where(
+            n_m > 0,
+            np.clip(
+                np.ceil(self.participation_rate * n_m),
+                self.min_per_edge,
+                np.maximum(n_m, 1),
+            ),
+            0,
+        ).astype(np.int64)
+
+        # One lexsort over all (round, edge) groups: primary round,
+        # secondary edge, tertiary z descending; within each group the
+        # first k_m entries win.
+        rf = np.repeat(np.arange(num_rounds), n)
+        gf = np.tile(gid, num_rounds)
+        zf = z.ravel()
+        order = np.lexsort((-zf, gf, rf))
+        sr, sg = rf[order], gf[order]
+        newgrp = np.ones(num_rounds * n, bool)
+        newgrp[1:] = (sr[1:] != sr[:-1]) | (sg[1:] != sg[:-1])
+        starts = np.where(newgrp, np.arange(num_rounds * n), 0)
+        pos = np.arange(num_rounds * n) - np.maximum.accumulate(starts)
+        take = (pos < k_m[sg]) & np.isfinite(zf[order])
+        out = np.zeros(num_rounds * n, bool)
+        out[order] = take
+        return out.reshape(num_rounds, n)
+
+    def sample_mask(self, key, weights, group_ids, num_groups):
+        """Single-round convenience wrapper: ``(N,)`` bool cohort mask."""
+        return self.sample_rounds(key, weights, group_ids, num_groups, 1)[0]
+
+    def inclusion_probs(self, key, weights, group_ids, num_groups):
+        """Per-UE inclusion probability ``pi_n`` of one round's draw.
+
+        Gumbel-top-k with propensities ``p_n = exp(logits)`` is the
+        exponential race: UE n enters the cohort iff its Exp(p_n) clock
+        rings among the first k_m.  Calibrating a per-edge rate ``t_m``
+        with ``sum_n (1 - exp(-p_n t_m)) = k_m`` (bisection) gives the
+        standard tight approximation ``pi_n = 1 - exp(-p_n t_m)`` —
+        EXACT for uniform propensities (``pi = k_m / n_m``), and the
+        ingredient ``participation_weights`` needs for inverse-propensity
+        reweighting of the non-uniform samplers.  Ineligible rows get
+        ``pi = 0``.
+        """
+        w = np.asarray(weights, np.float64)
+        gid = np.asarray(group_ids, np.int64)
+        ng = int(num_groups)
+        eligible = w > 0
+        pi = np.zeros(w.shape[0])
+        if self.is_full():
+            pi[eligible] = 1.0
+            return pi
+        logit = np.asarray(self.logits(_ensure_key(key), w), np.float64)
+        n_m = np.bincount(gid[eligible], minlength=ng)
+        k_m = np.where(
+            n_m > 0,
+            np.clip(np.ceil(self.participation_rate * n_m),
+                    self.min_per_edge, np.maximum(n_m, 1)),
+            0,
+        ).astype(np.int64)
+        for m in range(ng):
+            rows = np.flatnonzero(eligible & (gid == m))
+            if rows.size == 0:
+                continue
+            k = int(k_m[m])
+            if k >= rows.size:
+                pi[rows] = 1.0
+                continue
+            p = np.exp(logit[rows] - logit[rows].max())
+            lo, hi = 0.0, 1.0
+            while (1.0 - np.exp(-p * hi)).sum() < k:
+                hi *= 2.0
+            for _ in range(60):
+                mid = 0.5 * (lo + hi)
+                if (1.0 - np.exp(-p * mid)).sum() < k:
+                    lo = mid
+                else:
+                    hi = mid
+            pi[rows] = 1.0 - np.exp(-p * 0.5 * (lo + hi))
+        return pi
+
+    def ipw_base_weights(self, key, weights, group_ids, num_groups):
+        """Static inverse-propensity aggregation weights.
+
+        ``w~_n = (w_n / pi_n)``, rescaled per edge so each edge's total
+        is the TRUE mass W_m — so ``survivor_weights(w~, mask)`` yields
+        the Hajek (self-normalized IPW) estimator of eq. 6 per round
+        while eq. 10's relative edge masses are untouched.  For the
+        uniform sampler ``pi`` is constant within an edge, so this
+        returns the original weights (the legacy behavior) exactly up to
+        float rounding.
+        """
+        w = np.asarray(weights, np.float64)
+        if self.is_full():
+            return w.copy()
+        gid = np.asarray(group_ids, np.int64)
+        ng = int(num_groups)
+        pi = self.inclusion_probs(key, w, gid, ng)
+        adj = np.where(w > 0, w / np.maximum(pi, 1e-12), 0.0)
+        full = np.bincount(gid, weights=w, minlength=ng)
+        got = np.bincount(gid, weights=adj, minlength=ng)
+        scale = np.where(got > 0, full / np.maximum(got, 1e-12), 0.0)
+        return adj * scale[gid]
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSampler(ClientSampler):
+    """Uniform without replacement within each edge."""
+
+    name = "uniform"
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightProportionalSampler(ClientSampler):
+    """Plackett-Luce draw with inclusion propensity proportional to weight.
+
+    ``logits = log w`` under Gumbel-top-k reproduces sequential
+    weight-proportional sampling without replacement; a zero-weight row
+    has propensity exactly 0 (it is ineligible, not merely unlikely).
+    """
+
+    name = "weight"
+
+    def logits(self, key, weights):
+        with np.errstate(divide="ignore"):
+            return np.where(weights > 0, np.log(np.maximum(weights, 1e-300)), -np.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParetoSampler(ClientSampler):
+    """Pareto-biased availability: a few UEs are chronically favored.
+
+    Each UE gets a persistent propensity ``s_n ~ Pareto(alpha)`` (drawn
+    once from the run key, fixed across rounds), modeling heavy-tailed
+    device availability; rounds then sample proportional to ``s_n``.
+    Smaller ``alpha`` = heavier tail = more concentrated participation.
+    """
+
+    alpha: float = 1.5
+
+    name = "pareto"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not float(self.alpha) > 0:
+            raise ValueError("alpha must be > 0")
+
+    def logits(self, key, weights):
+        key = _ensure_key(key)
+        u = np.asarray(
+            jax.random.uniform(
+                jax.random.fold_in(key, 0),
+                (weights.shape[0],),
+                minval=0.0,
+                maxval=1.0 - 1e-7,
+            ),
+            np.float64,
+        )
+        # log of s = (1-u)^(-1/alpha): heavy-tailed persistent propensity.
+        return -np.log1p(-u) / float(self.alpha)
+
+
+SAMPLERS: Dict[str, Type[ClientSampler]] = {
+    "uniform": UniformSampler,
+    "weight": WeightProportionalSampler,
+    "pareto": ParetoSampler,
+}
+
+
+def make_sampler(name: str, participation_rate: float, **kw) -> ClientSampler:
+    """Registry constructor (mirrors ``stochastic.scenario``)."""
+    try:
+        cls = SAMPLERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sampler {name!r}; available: {sorted(SAMPLERS)}"
+        ) from None
+    return cls(participation_rate=participation_rate, **kw)
+
+
+def participation_weights(weights, participation, group_ids, num_groups,
+                          survivors=None, propensity=None):
+    """Mass-preserving reweighting of a sampled (and possibly faulted) cohort.
+
+    ANDs the participation mask with ``survivors`` (if given) and applies
+    ONE renormalization, so faults x sampling never double-discount:
+    within each edge the kept members' weights are rescaled to sum
+    exactly to the edge's full mass W_m, keeping eq. 10's cloud
+    weighting untouched.  An edge whose cohort is entirely gone (dead
+    AND/OR unsampled) gets all-zero weights — downstream aggregation
+    yields exact zeros, never NaN.
+
+    ``propensity`` (optional ``(N,)`` inclusion probabilities, see
+    ``ClientSampler.inclusion_probs``) switches the base measure to the
+    inverse-propensity weights ``w_n / pi_n`` before masking — the Hajek
+    estimator whose per-round expectation matches the full eq. 6 mean
+    for NON-uniform samplers too (weight-proportional, pareto).  Without
+    it the estimator is self-normalized over raw weights, which is exact
+    for uniform-within-edge sampling only.
+    """
+    import jax.numpy as jnp
+
+    part = jnp.asarray(participation, bool)
+    if survivors is not None:
+        part = jnp.logical_and(part, jnp.asarray(survivors, bool))
+    if propensity is None:
+        return aggregate.survivor_weights(weights, part, group_ids,
+                                          num_groups)
+    w = np.asarray(weights, np.float64)
+    gid = np.asarray(group_ids, np.int64)
+    ng = int(num_groups)
+    pi = np.asarray(propensity, np.float64)
+    adj = np.where(w > 0, w / np.maximum(pi, 1e-12), 0.0)
+    masked = adj * np.asarray(part, np.float64)
+    full = np.bincount(gid, weights=w, minlength=ng)
+    kept = np.bincount(gid, weights=masked, minlength=ng)
+    scale = np.where(kept > 0, full / np.maximum(kept, 1e-12), 0.0)
+    return jnp.asarray(masked * scale[gid], jnp.float32)
+
+
+def expected_cohort(weights, group_ids, num_groups, rate, min_per_edge=1):
+    """Host-side cohort size ``sum_m k_m`` for capacity planning/benches."""
+    w = np.asarray(weights, np.float64)
+    gid = np.asarray(group_ids, np.int64)
+    n_m = np.bincount(gid[w > 0], minlength=int(num_groups))
+    k_m = np.where(
+        n_m > 0,
+        np.clip(np.ceil(float(rate) * n_m), int(min_per_edge), np.maximum(n_m, 1)),
+        0,
+    )
+    return int(k_m.sum())

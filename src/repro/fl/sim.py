@@ -55,10 +55,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
-from repro.core import delay, faults
+from repro.core import delay, faults, stochastic
 from repro.core.schedule import HFLSchedule
 from repro.fl import aggregate, clients
 from repro.fl.flatten import FlatLayout, ShardedFlatLayout
+
+
+def _combine_masks(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """AND two (C, N) bool mask matrices with mismatched row counts by
+    clamping each to its last row (the same clamp the async replay applies
+    per event), so faults x sampling compose into ONE mask."""
+    rows = max(a.shape[0], b.shape[0])
+    ai = np.minimum(np.arange(rows), a.shape[0] - 1)
+    bi = np.minimum(np.arange(rows), b.shape[0] - 1)
+    return a[ai] & b[bi]
 
 
 @dataclasses.dataclass
@@ -85,7 +95,7 @@ class HFLSimulator:
                  mesh=None, mode: str = "sync", max_staleness: int = 0,
                  staleness_decay: float = 0.9, delay_model=None,
                  delay_seed: int = 0, fault_model=None, fault_policy=None,
-                 fault_seed: int = 0):
+                 fault_seed: int = 0, sampler=None, sample_seed: int = 0):
         """``delay_model`` (a ``repro.core.stochastic.DelayModel``) makes
         the CLOCK stochastic in both modes: sync rounds cost that round's
         ``max_m`` cycle draw instead of the constant eq. 34 ``T``, async
@@ -109,7 +119,22 @@ class HFLSimulator:
         ``is_null()``) takes the exact legacy code paths, so all parity
         guarantees above are untouched.  ``fault_seed`` keys the fault
         draws (which subsume the delay draws in fault runs — see
-        ``core.faults.faulty_cycle_stats``)."""
+        ``core.faults.faulty_cycle_stats``).
+
+        ``sampler`` (a ``repro.fl.sampling.ClientSampler``, BEYOND-PAPER)
+        turns on partial participation: each cloud round (sync) or
+        departure cycle (async) aggregates only a sampled cohort per
+        edge, with per-edge-mass-preserving reweighting
+        (``sampling.participation_weights``) keeping eqs. 6/10 unbiased,
+        and the CLOCK paced by the participants only (an unsampled UE
+        never uploads, so it cannot straggle its edge).  Composes with
+        ``fault_model`` by ANDing the masks and renormalizing ONCE —
+        faults and sampling never double-discount (the fault run's clock
+        pricing stays full-fleet: the policy cannot know the cohort when
+        it sets deadlines).  ``sample_seed`` keys the draws.  A sampler
+        with ``participation_rate=1.0`` is routed to ``None`` at
+        construction, so full participation takes the exact legacy code
+        paths (byte-identical, like a null fault model)."""
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
         if mode == "async" and solver != "gd":
@@ -130,6 +155,14 @@ class HFLSimulator:
                 raise ValueError("fault_model= supports solver='gd' only "
                                  "(DANE's global gradient assumes every UE "
                                  "reports; survivor masking breaks it)")
+        if sampler is not None and sampler.is_full():
+            sampler = None               # exact legacy paths (parity)
+        if sampler is not None and solver != "gd":
+            raise ValueError("sampler= supports solver='gd' only (DANE's "
+                             "global gradient assumes every UE reports; "
+                             "cohort masking breaks it)")
+        self.sampler = sampler
+        self.sample_seed = int(sample_seed)
         self.fault_model = fault_model
         self.fault_policy = (fault_policy if fault_policy is not None
                              else faults.deadline_failover_policy())
@@ -195,12 +228,27 @@ class HFLSimulator:
             self._hot_batches = self.batches
             self._hot_weights = self.weights
             self._hot_gids = self.group_ids
+        # Inverse-propensity base measure for sampled aggregation: under a
+        # non-uniform sampler the raw self-normalized cohort mean tilts
+        # toward high-propensity UEs; `ipw_base_weights` divides that
+        # tilt out once (static per run — propensities are pure in the
+        # run key) while preserving every edge's true mass W_m.  Uniform
+        # sampling (and no sampler) leaves the weights untouched.
+        if self.sampler is not None:
+            adj = self.sampler.ipw_base_weights(
+                self.sample_seed, np.asarray(self.weights),
+                np.asarray(self.group_ids), self.schedule.num_edges)
+            self._hot_agg_weights = (
+                self._slayout.pad_weights(adj) if self._slayout is not None
+                else jnp.asarray(adj, jnp.float32))
+        else:
+            self._hot_agg_weights = self._hot_weights
         self._cloud_round = self._build_cloud_round()
         if mode == "async":
             self._depart_cycle, self._merge = self._build_async_ops()
         self._weighted_ops_cache = None
-        if fault_model is not None:
-            self._weighted_ops()            # build eagerly for fault runs
+        if fault_model is not None or sampler is not None:
+            self._weighted_ops()    # build eagerly for fault/sampled runs
         # Weight-averaged train loss over ALL UEs (one vmap'd loss).
         self._train_loss = jax.jit(
             lambda gp, batches, w: jnp.sum(
@@ -383,15 +431,37 @@ class HFLSimulator:
                 jnp.asarray(surv.T))).T
         return surv
 
-    def _fault_round_weights(self, ue_ok):
+    def _participation_matrix(self, num_rounds: int) -> np.ndarray:
+        """(num_rounds, N) bool cohort masks on the ORIGINAL row order —
+        one batched keyed draw (``sampler.sample_rounds``); this is what
+        the CLOCK consumes (delay models index original UEs)."""
+        return self.sampler.sample_rounds(
+            self.sample_seed, np.asarray(self.weights),
+            np.asarray(self.group_ids), self.schedule.num_edges, num_rounds)
+
+    def _participation_hot(self, part: np.ndarray) -> np.ndarray:
+        """Map (R, N) masks onto the HOT row layout.  Uses ``pad_mask``
+        (pad rows -> False), NOT ``pad_rows`` (row-0 copies) — a pad row
+        must never look sampled."""
+        if self._slayout is None:
+            return part
+        return np.asarray(self._slayout.pad_mask(part.T)).T
+
+    def _fault_round_weights(self, ue_ok, base=None):
         """(w_edge, w_cloud) for one round/wave from the hot-row survivor
         mask: survivor-renormalized edge weights + cloud weights zeroing
-        edges with no surviving mass."""
+        edges with no surviving mass.  ``base`` overrides the base
+        measure (the service passes per-cycle IPW weights); the default
+        is the run-static ``_hot_agg_weights`` (== ``_hot_weights``
+        unless a non-uniform sampler is active)."""
         M = self.schedule.num_edges
+        if base is None:
+            base = self._hot_agg_weights
+        base = jnp.asarray(base, jnp.float32)
         w_edge = aggregate.survivor_weights(
-            self._hot_weights, jnp.asarray(ue_ok), self._hot_gids, M)
+            base, jnp.asarray(ue_ok), self._hot_gids, M)
         mass = jax.ops.segment_sum(
-            jnp.asarray(self._hot_weights) * jnp.asarray(ue_ok, jnp.float32),
+            base * jnp.asarray(ue_ok, jnp.float32),
             self._hot_gids, num_segments=M)
         w_cloud = jnp.asarray(self._hot_weights) * (mass > 0)[self._hot_gids]
         return w_edge, w_cloud
@@ -435,7 +505,7 @@ class HFLSimulator:
                 g, NamedSharding(self.mesh, self._slayout.col_spec))
         return g
 
-    def replay_departure(self, g, mask, ue_ok=None) -> None:
+    def replay_departure(self, g, mask, ue_ok=None, agg_weights=None) -> None:
         """One departure wave: re-seed the masked rows from ``g``, run
         their b-iteration edge cycle and commit them into the flat buffer.
 
@@ -445,12 +515,15 @@ class HFLSimulator:
         the wave aggregates under mass-preserving survivor-renormalized
         weights (``aggregate.survivor_weights``); rows of excluded UEs
         still train but carry zero weight, keeping eq. 6 the unbiased
-        mean of the participants.
+        mean of the participants.  ``agg_weights`` overrides the base
+        measure of that renormalization (per-cycle IPW weights from the
+        service's sampler).
         """
         if self.mode != "async":
             raise RuntimeError("replay_departure requires mode='async'")
         if ue_ok is not None:
-            w_edge, _ = self._fault_round_weights(np.asarray(ue_ok))
+            w_edge, _ = self._fault_round_weights(np.asarray(ue_ok),
+                                                  base=agg_weights)
             _, faulty_depart = self._weighted_ops()
             self._flat = faulty_depart(self._flat, g, self._hot_batches,
                                        jnp.asarray(mask), w_edge)
@@ -521,6 +594,9 @@ class HFLSimulator:
         if self.fault_model is not None:
             return self._run_sync_faulty(test_batch, rounds, eval_every,
                                          verbose)
+        if self.sampler is not None:
+            return self._run_sync_sampled(test_batch, rounds, eval_every,
+                                          verbose)
         if self.delay_model is not None:
             # One batched draw for the whole run: round r costs the max
             # over edges of that round's cycle draw (stochastic eq. 34).
@@ -547,6 +623,62 @@ class HFLSimulator:
                 if verbose:
                     print(f"round {r+1:3d}/{rounds}  t={clock:9.2f}s  "
                           f"acc={accs[-1]:.4f}  loss={tlosses[-1]:.4f}")
+        return SimResult(times=np.array(times), test_acc=np.array(accs),
+                         test_loss=np.array(tlosses),
+                         train_loss=np.array(trlosses),
+                         schedule=sched, final_params=self.global_params())
+
+    def _run_sync_sampled(self, test_batch: dict, rounds: int,
+                          eval_every: int, verbose: bool) -> SimResult:
+        """Synchronous rounds under partial participation (``sampler=``).
+
+        One batched keyed draw yields every round's cohort.  Round ``r``
+
+        * COSTS the masked stochastic eq. 34: each edge's tau is the
+          member max over round ``r``'s PARTICIPANTS (the delay engine's
+          ``participation=`` threading; ``DeterministicDelays`` when no
+          ``delay_model`` was given), so shrinking the cohort shortens
+          the barrier;
+        * AGGREGATES only the cohort, under per-edge mass-preserving
+          reweighting (``_fault_round_weights`` — the same
+          ``survivor_weights`` renormalization fault rounds use), so the
+          cloud trajectory stays an unbiased estimate of the
+          full-participation one.
+        """
+        sched = self.schedule
+        part = self._participation_matrix(rounds)
+        part_hot = self._participation_hot(part)
+        if sched.problem is not None:
+            dm = self.delay_model or stochastic.DeterministicDelays()
+            draws = dm.cycle_times(self.delay_seed, sched.problem,
+                                   sched.assoc, sched.a, sched.b, rounds,
+                                   participation=part)
+            round_times = np.asarray(draws).max(axis=1)
+        else:
+            # No problem attached: the constant eq. 34 bound is all we
+            # have (full-fleet pacing — conservative).
+            round_times = np.full(rounds, sched.cloud_round_time)
+
+        times, accs, tlosses, trlosses = [], [], [], []
+        clock = 0.0
+        test_batch = jax.tree.map(jnp.asarray, test_batch)
+        for r in range(rounds):
+            w_edge, w_cloud = self._fault_round_weights(part_hot[r])
+            self._flat = self._faulty_cloud_round(
+                self._flat, self._hot_batches, w_edge, w_cloud)
+            clock += float(round_times[r])
+            if (r + 1) % eval_every == 0 or r == rounds - 1:
+                gp = self.global_params()
+                loss, mets = self.loss_fn(gp, test_batch)
+                trl = self._train_loss(gp, self.batches, self.weights)
+                times.append(clock)
+                accs.append(float(mets.get("acc", jnp.nan)))
+                tlosses.append(float(loss))
+                trlosses.append(float(trl))
+                if verbose:
+                    print(f"round {r+1:3d}/{rounds}  t={clock:9.2f}s  "
+                          f"acc={accs[-1]:.4f}  loss={tlosses[-1]:.4f}  "
+                          f"cohort={int(part[r].sum())}")
         return SimResult(times=np.array(times), test_acc=np.array(accs),
                          test_loss=np.array(tlosses),
                          train_loss=np.array(trlosses),
@@ -580,6 +712,13 @@ class HFLSimulator:
         else:
             round_times = np.where(down, 0.0, ct).max(axis=1)
         surv = self._fault_survivor_matrix(fc)
+        if self.sampler is not None:
+            # Faults x sampling: AND the masks, renormalize ONCE inside
+            # `_fault_round_weights` — no double discount.  The clock
+            # keeps the policy's full-fleet pricing (deadlines are set
+            # before the cohort is known).
+            surv = surv & self._participation_hot(
+                self._participation_matrix(rounds))
         gids = np.asarray(self._hot_gids)
 
         times, accs, tlosses, trlosses = [], [], [], []
@@ -627,19 +766,35 @@ class HFLSimulator:
             raise ValueError("mode='async' needs schedule.problem to derive "
                              "per-edge cycle times (eqs. 8/33)")
         rounds = rounds or sched.rounds
+        part = part_hot = None
+        if self.sampler is not None:
+            # One cohort per CYCLE, pre-drawn for the longest trace the
+            # gate allows (cycles beyond that clamp to the last row, the
+            # same clamp the fault matrix uses).
+            part = self._participation_matrix(rounds + self.max_staleness)
+            part_hot = self._participation_hot(part)
         if self.fault_model is not None:
+            # Fault pricing stays full-fleet (the policy cannot know the
+            # cohort when it sets deadlines/retries) — only the MODEL
+            # masks compose below.
             stats = delay.faulty_async_completion(
                 sched.problem, sched.assoc, sched.a, sched.b, rounds=rounds,
                 max_staleness=self.max_staleness,
                 fault_model=self.fault_model, policy=self.fault_policy,
                 delay_model=self.delay_model, key=self.fault_seed)
             surv = self._fault_survivor_matrix(stats["cycle_stats"])
+            if part_hot is not None:
+                surv = _combine_masks(surv, part_hot)
         else:
             stats = delay.async_completion(
                 sched.problem, sched.assoc, sched.a, sched.b, rounds=rounds,
                 max_staleness=self.max_staleness,
-                delay_model=self.delay_model, key=self.delay_seed)
-            surv = None
+                delay_model=self.delay_model, key=self.delay_seed,
+                participation=part)
+            # The sampled cohort rides the existing survivor machinery:
+            # departures stamp the cycle's mask, merges gate on delivered
+            # mass, replay reweights via `survivor_weights`.
+            surv = part_hot
         tl = stats["timeline"]
         active = np.asarray(stats["active_edges"])
         gids = np.asarray(self._hot_gids)

@@ -231,3 +231,84 @@ def hier_segment_aggregate_2d(x, w, onehot, gw, *, blk_f: int = 512,
         interpret=interpret,
     )(x, w, onehot, gw)
     return out[:N]
+
+
+# ---------------------------------------------------------------------------
+# Reduce-only segment sums: the streaming-accumulator kernel.
+# ---------------------------------------------------------------------------
+
+
+def _seg_sum_kernel(x_ref, w_ref, oh_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (N, blk_f)
+    w = w_ref[...].astype(jnp.float32)          # (N,)
+    oh = oh_ref[...]                            # (M, N)
+    o_ref[...] = jnp.dot(oh * w[None, :], x,
+                         preferred_element_type=jnp.float32)   # (M, blk_f)
+
+
+def _seg_sum_kernel_blocked(x_ref, w_ref, oh_ref, o_ref):
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (blk_n, blk_f)
+    w = w_ref[...].astype(jnp.float32)          # (blk_n,) zero-padded
+    oh = oh_ref[...]                            # (M, blk_n)
+    o_ref[...] += jnp.dot(oh * w[None, :], x,
+                          preferred_element_type=jnp.float32)
+
+
+def hier_segment_sum_2d(x, w, onehot, *, blk_f: int = 512,
+                        blk_n: int = 256, interpret: bool = False):
+    """Per-group WEIGHTED SUMS, no normalize, no scatter-back.
+
+    x: (N, F), w: (N,), onehot: (M, N) -> (M, F) fp32 with
+    ``out[m] = sum_{n in group m} w[n] x[n]``.  This is the chunk step of
+    the streaming edge accumulator (``repro.fl.aggregate``): each arrival
+    wave reduces straight into an ``(M, F)`` accumulator, so no O(N*F)
+    buffer ever exists.  The blocked variant revisits the same output
+    block along the minor client-block axis (init at ni == 0, then
+    accumulate in place) — output-as-accumulator instead of the fused
+    kernel's scratch + scatter phase, because here (M, F) IS the result.
+    """
+    N, F = x.shape
+    M = onehot.shape[0]
+    blk_f = min(blk_f, F)
+    n_f = pl.cdiv(F, blk_f)
+
+    if N <= MAX_N_UNBLOCKED:
+        return pl.pallas_call(
+            _seg_sum_kernel,
+            grid=(n_f,),
+            in_specs=[
+                pl.BlockSpec((N, blk_f), lambda fi: (0, fi)),
+                pl.BlockSpec((N,), lambda fi: (0,)),
+                pl.BlockSpec((M, N), lambda fi: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((M, blk_f), lambda fi: (0, fi)),
+            out_shape=jax.ShapeDtypeStruct((M, F), jnp.float32),
+            interpret=interpret,
+        )(x, w, onehot)
+
+    blk_n = min(blk_n, N)
+    n_n = pl.cdiv(N, blk_n)
+    pad_n = n_n * blk_n - N
+    if pad_n:
+        # zero weights + zero one-hot columns: padded clients add nothing.
+        x = jnp.pad(x, ((0, pad_n), (0, 0)))
+        w = jnp.pad(w, (0, pad_n))
+        onehot = jnp.pad(onehot, ((0, 0), (0, pad_n)))
+    return pl.pallas_call(
+        _seg_sum_kernel_blocked,
+        grid=(n_f, n_n),
+        in_specs=[
+            pl.BlockSpec((blk_n, blk_f), lambda fi, ni: (ni, fi)),
+            pl.BlockSpec((blk_n,), lambda fi, ni: (ni,)),
+            pl.BlockSpec((M, blk_n), lambda fi, ni: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((M, blk_f), lambda fi, ni: (0, fi)),
+        out_shape=jax.ShapeDtypeStruct((M, F), jnp.float32),
+        interpret=interpret,
+    )(x, w, onehot)

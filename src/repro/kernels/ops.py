@@ -155,6 +155,34 @@ def hier_segment_aggregate(x, w, group_ids, *, num_groups: int,
     return out[:, :F].reshape((N,) + shape)
 
 
+@functools.partial(jax.jit, static_argnames=("num_groups", "blk_f"))
+def hier_segment_accumulate(x, w, group_ids, *, num_groups: int,
+                            blk_f: int = 512):
+    """Streaming edge accumulation: per-group weighted SUMS (eq. 6
+    numerator), reduce-only.
+
+    x: (N, ...) any float dtype, w: (N,), group_ids: (N,) ints in
+    [0, num_groups) -> (num_groups, ...) fp32 with
+    out[m] = sum_{n in group m} w[n] x[n].  The streaming variant of
+    ``hier_segment_aggregate``: a chunk of arriving client rows reduces
+    straight into the (M, F) accumulator, so the caller never holds an
+    O(N*F) buffer (see ``repro.fl.aggregate.StreamingEdgeAccumulator``).
+    """
+    N = x.shape[0]
+    shape = x.shape[1:]
+    w32 = w.astype(jnp.float32)
+    gid = group_ids.astype(jnp.int32)
+    onehot = (gid[None, :] ==
+              jnp.arange(num_groups, dtype=jnp.int32)[:, None]
+              ).astype(jnp.float32)                       # (M, N)
+    x2 = x.reshape(N, -1)
+    F = x2.shape[1]
+    x2, _ = _pad_to(x2, 1, min(blk_f, max(F, 8)))
+    out = ha.hier_segment_sum_2d(x2, w32, onehot, blk_f=blk_f,
+                                 interpret=_interpret())
+    return out[:, :F].reshape((num_groups,) + shape)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "blk_w"))
 def decode_attention(q, k_cache, v_cache, slot_pos, pos, *, window: int = 0,
                      blk_w: int = 256):

@@ -118,6 +118,10 @@ class ServiceConfig:
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0              # checkpoint cadence in events; 0=off
     window: int = 64                 # rolling SLO window (latencies)
+    sampler: str = ""                # ""=full participation; else a
+                                     # repro.fl.sampling registry name
+    participation_rate: float = 1.0  # per-edge cohort fraction (0, 1]
+    sample_seed: int = 0             # keys the per-cycle cohort draws
 
     def __post_init__(self):
         if self.max_staleness < 1:
@@ -140,6 +144,12 @@ class ServiceConfig:
             if not (s.load > 0 and math.isfinite(s.load)):
                 raise ValueError(f"segment load must be finite and "
                                  f"positive, got {s.load}")
+        if not (0.0 < self.participation_rate <= 1.0):
+            raise ValueError(f"participation_rate must be in (0, 1], got "
+                             f"{self.participation_rate}")
+        if self.sampler:
+            from repro.fl import sampling as fl_sampling
+            fl_sampling.make_sampler(self.sampler, self.participation_rate)
 
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
@@ -236,11 +246,25 @@ class HFLService:
         self.run_wall = 0.0              # seconds spent in run()
         self._ckpt_count = 0
 
+        # Per-cycle client sampling (repro.fl.sampling): a keyed cohort
+        # mask per cycle, pure in (sample_seed, cycle) — resume re-derives
+        # identical cohorts, so nothing extra goes into checkpoints.
+        if config.sampler and config.participation_rate < 1.0:
+            from repro.fl import sampling as fl_sampling
+            self._sampler = fl_sampling.make_sampler(
+                config.sampler, config.participation_rate)
+        else:
+            self._sampler = None
+        self._sample_key = stochastic.ensure_key(config.sample_seed)
+        self._part_masks: Dict[int, np.ndarray] = {}
+        self._part_ipw: Dict[int, np.ndarray] = {}
+
         # Replay the engine's initial departures (every edge departs
         # cycle 1 at t=0) so the flat buffer holds cycle-1 results.
         for d in self.engine.departures:
             self._dep_t[(int(d.edge), int(d.cycle))] = float(d.t)
-        self._replay_wave([(d.edge, d.t) for d in self.engine.departures])
+        self._replay_wave([(d.edge, d.t, d.cycle)
+                           for d in self.engine.departures])
 
     # -- traffic ---------------------------------------------------------
 
@@ -277,19 +301,78 @@ class HFLService:
                 ue_ok[rows[order[:k]]] = False
         return ue_ok
 
-    def _replay_wave(self, departs: List[Tuple[int, float]]) -> None:
+    def _participation_mask(self, cycle: int) -> np.ndarray:
+        """Hot-row cohort mask for ``cycle`` — a pure keyed draw (memoized;
+        ``fold_in(sample_key, cycle)``), so a resumed service re-derives
+        the exact masks the crashed run used."""
+        mask = self._part_masks.get(int(cycle))
+        if mask is None:
+            key = jax.random.fold_in(self._sample_key, int(cycle))
+            mask = self._sampler.sample_mask(
+                key, np.asarray(self.sim._hot_weights),
+                np.asarray(self.sim._hot_gids),
+                self.sim.schedule.num_edges)
+            self._part_masks[int(cycle)] = mask
+            if len(self._part_masks) > 64:
+                # Always-on service: evict old cycles (the SSP gate bounds
+                # how far behind a departure can be; re-deriving is a pure
+                # draw anyway).  Keeps the cache O(1) in run length.
+                for c in sorted(self._part_masks)[:-32]:
+                    del self._part_masks[c]
+        return mask
+
+    def _ipw_weights(self, cycle: int) -> np.ndarray:
+        """Hot-row inverse-propensity base weights for ``cycle`` — the
+        Hajek correction for non-uniform samplers (for the uniform
+        sampler this equals the raw hot weights).  Memoized and evicted
+        exactly like ``_participation_mask``; pure in the same key."""
+        w = self._part_ipw.get(int(cycle))
+        if w is None:
+            key = jax.random.fold_in(self._sample_key, int(cycle))
+            w = self._sampler.ipw_base_weights(
+                key, np.asarray(self.sim._hot_weights),
+                np.asarray(self.sim._hot_gids),
+                self.sim.schedule.num_edges)
+            self._part_ipw[int(cycle)] = w
+            if len(self._part_ipw) > 64:
+                for c in sorted(self._part_ipw)[:-32]:
+                    del self._part_ipw[c]
+        return w
+
+    def _replay_wave(self, departs: List[Tuple[int, float, int]]) -> None:
         """Train the departing cohorts from the published model: one
         ``replay_departure`` wave re-seeds their rows from ``g`` and runs
-        the b-iteration edge cycle in place."""
+        the b-iteration edge cycle in place.  With a configured sampler,
+        each cohort is cut to its cycle's sampled participants (composed
+        by AND with the degraded-mode shed mask; ONE ``survivor_weights``
+        renormalization downstream)."""
         if not departs:
             return
         gids = np.asarray(self.sim._hot_gids)
         cohorts = np.zeros(gids.shape[0], dtype=bool)
-        for m_eng, _t in departs:
+        for m_eng, _t, _c in departs:
             cohorts |= gids == int(self.active[m_eng])
+        ue_ok = self._shed_mask(cohorts)
+        agg_w = None
+        if self._sampler is not None:
+            part = np.ones(gids.shape[0], dtype=bool)
+            agg_w = np.asarray(self.sim._hot_weights, np.float64).copy()
+            for m_eng, _t, cyc in departs:
+                cohort = gids == int(self.active[m_eng])
+                part[cohort] = self._participation_mask(cyc)[cohort]
+                agg_w[cohort] = self._ipw_weights(cyc)[cohort]
+            combined = part if ue_ok is None else (ue_ok & part)
+            # Shed x sampling can empty a cohort; an empty cohort would
+            # publish a zero row at full mass.  Fall back to the sampled
+            # cohort alone there (sampling outranks the advisory shed).
+            for m_eng, _t, _c in departs:
+                cohort = gids == int(self.active[m_eng])
+                if not (combined & cohort).any():
+                    combined[cohort] = part[cohort]
+            ue_ok = combined
         g_dev = self.sim.place_cloud_vector(self.g)
-        self.sim.replay_departure(g_dev, cohorts,
-                                  ue_ok=self._shed_mask(cohorts))
+        self.sim.replay_departure(g_dev, cohorts, ue_ok=ue_ok,
+                                  agg_weights=agg_w)
 
     # -- cloud merge queue ----------------------------------------------
 
@@ -362,11 +445,11 @@ class HFLService:
         captured BEFORE any re-depart overwrites the cohort rows), run
         the watermark logic, then train the step's departures as one
         wave seeded from the currently-published model."""
-        departs: List[Tuple[int, float]] = []
+        departs: List[Tuple[int, float, int]] = []
         for kind, ev in records:
             if kind == "depart":
                 self._dep_t[(int(ev.edge), int(ev.cycle))] = float(ev.t)
-                departs.append((int(ev.edge), float(ev.t)))
+                departs.append((int(ev.edge), float(ev.t), int(ev.cycle)))
                 self.clock = max(self.clock, float(ev.t))
             elif kind == "update":
                 t = float(ev.t)
@@ -387,7 +470,7 @@ class HFLService:
                 self.clock = max(self.clock, t)
                 self.events_done += 1
         if departs:
-            self._drain(max(t for _, t in departs))
+            self._drain(max(t for _, t, _ in departs))
             self._replay_wave(departs)
 
     def run(self, max_updates: int, verbose: bool = False) -> dict:

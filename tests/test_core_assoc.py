@@ -63,3 +63,46 @@ def test_greedy_prefers_snr():
     # edge 0 got the single best-SNR UE for edge 0
     best = int(np.argmax(snr[:, 0]))
     assert A[best, 0] == 1
+
+
+# ---------------------------------------------------------------------------
+# PR 8: scalable cluster-granularity association (assoc.cluster_refined)
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_within_refined_iid_campus():
+    """At N=10^4 the k-means cluster association lands within 5% of the
+    per-UE ``refined`` search on the iid_campus makespan (it is usually
+    BETTER: the bounded polish escapes refined's proposed() warm start)."""
+    from repro.core import stochastic
+
+    p = HFLProblem(num_edges=8, num_ues=10_000, seed=0)
+    Ar = assoc.refined(p, a=10.0)
+    Ac = assoc.cluster_refined(p, a=10.0)
+    model = stochastic.scenario("iid_campus").model
+    mr = model.cycle_times(0, p, Ar, 10.0, 3, 16).max(axis=1).mean()
+    mc = model.cycle_times(0, p, Ac, 10.0, 3, 16).max(axis=1).mean()
+    assert mc <= 1.05 * mr, (mc, mr)
+
+
+def test_cluster_swap_avoids_down_edges():
+    """Placement AND the swap scan never put a cluster on a down edge."""
+    from repro.core import faults, stochastic
+
+    p = HFLProblem(num_edges=6, num_ues=600, seed=1)
+    outage = faults.EdgeOutage(rate=0.3)
+    windows = outage.sample_windows(stochastic.ensure_key(0), p,
+                                    assoc.greedy(p), 10.0, 3, 8)
+    dead = sorted({m for m, _, _ in windows})[:3]   # keep some edges alive
+    assert dead, "seed must produce at least one outage window"
+    A = assoc.cluster_refined(p, a=10.0, dead_edges=dead)
+    assert (A.sum(1) == 1).all()
+    for m in dead:
+        assert A[:, m].sum() == 0, f"UE placed on down edge {m}"
+
+
+def test_cluster_matches_strategy_entry():
+    p = HFLProblem(num_edges=4, num_ues=120, seed=3)
+    A1 = assoc.STRATEGIES["cluster"](p, a=10.0, seed=3)
+    A2 = assoc.cluster_refined(p, a=10.0, seed=3)
+    assert np.array_equal(A1, A2)

@@ -1,0 +1,279 @@
+"""Property suite for per-round client sampling (PR 8, repro.fl.sampling).
+
+Runs under real hypothesis when installed AND under the deterministic
+``tests/_shims`` fallback (only ``integers``/``sampled_from``/``booleans``/
+``floats`` strategies and ``settings(max_examples=...)`` are used here).
+
+Covers the four ISSUE properties:
+
+* sampled-aggregate expectation within CLT bounds of the full mean;
+* ``participation_rate=1.0`` is byte-identical to the legacy path;
+* mass reweighting sums exactly to W_m per edge;
+* composition with ``survivor_weights`` never yields NaN, and a
+  dead-AND-unsampled edge contributes an exact zero —
+
+plus the pad-row hazard regression (no sampler ever selects a
+``ShardedFlatLayout`` pad row; weight-proportional propensity is exactly
+0) and single-device streaming-vs-batch aggregation parity at chunk
+sizes {1, 7, N} on both the jnp and the Pallas(interpret) paths.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import schedule
+from repro.core.problem import HFLProblem
+from repro.data import partition, synthetic
+from repro.fl import aggregate, flatten, sampling
+from repro.fl.sim import HFLSimulator
+from repro.models import lenet
+
+SAMPLER_NAMES = sorted(sampling.SAMPLERS)
+
+
+def _fleet(seed, n=64, m=4):
+    rng = np.random.default_rng(seed)
+    gid = rng.integers(0, m, n)
+    gid[:m] = np.arange(m)              # every edge nonempty
+    w = rng.uniform(0.5, 2.0, n)
+    return w, gid
+
+
+# ---------------------------------------------------------------------------
+# Property 1: unbiasedness — sampled estimate within CLT bounds.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", SAMPLER_NAMES)
+def test_sampled_aggregate_within_clt(name):
+    """Across many independent rounds, the inverse-propensity reweighted
+    sampled edge mean matches the full-participation mean within 4
+    standard errors — including the non-uniform samplers, whose raw
+    self-normalized estimate is systematically tilted toward the
+    high-propensity UEs (``inclusion_probs`` is what removes that)."""
+    rng = np.random.default_rng(7)
+    n, m, rounds = 200, 4, 400
+    gid = rng.integers(0, m, n)
+    w = rng.uniform(0.5, 2.0, n)
+    x = rng.normal(0.0, 1.0, n)
+    sampler = sampling.make_sampler(name, participation_rate=0.3)
+    part = sampler.sample_rounds(0, w, gid, m, rounds)
+    pi = sampler.inclusion_probs(0, w, gid, m)
+    # the calibrated race probabilities track the empirical frequencies
+    assert np.abs(part.mean(0) - pi).max() < 0.12
+    w_m = np.bincount(gid, weights=w, minlength=m)
+    full = np.bincount(gid, weights=w * x, minlength=m) / w_m
+    ests = np.zeros((rounds, m))
+    for r in range(rounds):
+        wp = np.asarray(sampling.participation_weights(
+            w, part[r], gid, m, propensity=pi))
+        ests[r] = np.bincount(gid, weights=wp * x, minlength=m) / w_m
+    err = np.abs(ests.mean(0) - full)
+    se = ests.std(0) / np.sqrt(rounds)
+    assert np.all(err <= 4.0 * se + 1e-6), (name, err, se)
+
+
+# ---------------------------------------------------------------------------
+# Property 2: rate=1.0 is the legacy path, byte for byte.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", SAMPLER_NAMES)
+def test_full_rate_masks_are_eligibility(name):
+    w, gid = _fleet(0)
+    w[5] = 0.0                          # one masked-out row
+    s = sampling.make_sampler(name, participation_rate=1.0)
+    assert s.is_full()
+    part = s.sample_rounds(3, w, gid, 4, 6)
+    assert np.array_equal(part, np.tile(w > 0, (6, 1)))
+    wp = np.asarray(sampling.participation_weights(w, part[0], gid, 4))
+    assert np.array_equal(wp, np.asarray(w, np.float32) *
+                          (w > 0).astype(np.float32))
+
+
+def test_full_rate_simulator_byte_identical():
+    """The acceptance bar: a sampler at rate=1.0 routes to the exact
+    legacy closure-weight code path — losses and clock are array_equal,
+    not merely allclose."""
+    prob = HFLProblem(num_edges=2, num_ues=8, epsilon=0.25, seed=0,
+                      samples_lo=50, samples_hi=120)
+    sch = schedule.plan(prob)
+    train = synthetic.logreg_data(seed=0, n=800, dim=12, num_classes=4)
+    test = synthetic.logreg_data(seed=1, n=200, dim=12, num_classes=4)
+    rng = np.random.default_rng(0)
+    parts = partition.size_partition(rng, 800, prob.samples.astype(int))
+    ue_data = [{k: train[k][ix] for k in train} for ix in parts]
+    init = lenet.logreg_init(jax.random.PRNGKey(0), 12, 4)
+
+    def loss(p, b):
+        return lenet.logreg_loss(p, b, l2=1e-3)
+
+    base = HFLSimulator(sch, loss, init, ue_data, lr=0.02,
+                        solver="gd").run(test, rounds=3)
+    samp = HFLSimulator(sch, loss, init, ue_data, lr=0.02, solver="gd",
+                        sampler=sampling.UniformSampler(
+                            participation_rate=1.0),
+                        sample_seed=5).run(test, rounds=3)
+    assert np.array_equal(np.asarray(base.test_loss),
+                          np.asarray(samp.test_loss))
+    assert np.array_equal(np.asarray(base.train_loss),
+                          np.asarray(samp.train_loss))
+    assert np.array_equal(np.asarray(base.times), np.asarray(samp.times))
+    for la, lb in zip(jax.tree.leaves(samp.final_params),
+                      jax.tree.leaves(base.final_params)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# Property 3: reweighted mass sums to W_m per edge.
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 30), name=st.sampled_from(SAMPLER_NAMES),
+       rate=st.sampled_from([0.05, 0.2, 0.5, 0.9]))
+@settings(max_examples=30, deadline=None)
+def test_mass_preserved_per_edge(seed, name, rate):
+    w, gid = _fleet(seed)
+    s = sampling.make_sampler(name, participation_rate=rate)
+    part = s.sample_mask(seed, w, gid, 4)
+    assert part[w > 0].sum() >= 1       # min_per_edge floor
+    wp = np.asarray(sampling.participation_weights(w, part, gid, 4))
+    full = np.bincount(gid, weights=w, minlength=4)
+    kept = np.bincount(gid, weights=wp, minlength=4)
+    np.testing.assert_allclose(kept, full, rtol=1e-5)
+    assert np.all(wp[~part] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Property 4: composition with survivor_weights — no NaN, exact zeros.
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 30), rate=st.sampled_from([0.1, 0.4]),
+       kill_edge=st.integers(0, 3))
+@settings(max_examples=30, deadline=None)
+def test_faults_compose_without_nan(seed, rate, kill_edge):
+    w, gid = _fleet(seed)
+    s = sampling.make_sampler("uniform", participation_rate=rate)
+    part = s.sample_mask(seed, w, gid, 4)
+    rng = np.random.default_rng(seed)
+    surv = rng.random(w.shape[0]) > 0.5
+    surv[gid == kill_edge] = False      # one edge fully dead
+    wp = np.asarray(sampling.participation_weights(w, part, gid, 4,
+                                                   survivors=surv))
+    assert np.all(np.isfinite(wp))
+    # dead-and-unsampled (and merely dead) rows are exact zeros
+    assert np.all(wp[gid == kill_edge] == 0.0)
+    assert np.all(wp[~(part & surv)] == 0.0)
+    # surviving sampled edges keep their full mass
+    full = np.bincount(gid, weights=w, minlength=4)
+    kept = np.bincount(gid, weights=wp, minlength=4)
+    alive = np.bincount(gid[part & surv], minlength=4) > 0
+    np.testing.assert_allclose(kept[alive], full[alive], rtol=1e-5)
+    assert np.all(kept[~alive] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Pad-row hazard regression: pad rows are never sampled.
+# ---------------------------------------------------------------------------
+
+
+def _padded_layout(gid, num_shards):
+    """A ShardedFlatLayout built via _pack_groups (no multi-device mesh
+    needed: pad_weights/pad_mask only consult the row permutation)."""
+    perm, n_padded = flatten._pack_groups(gid, num_shards)
+    n = len(gid)
+    inv = np.empty(n, np.int64)
+    inv[perm[perm >= 0]] = np.flatnonzero(perm >= 0)
+    base = flatten.FlatLayout.of_single(
+        lenet.logreg_init(jax.random.PRNGKey(0), 4, 3))
+    return flatten.ShardedFlatLayout(
+        base=base, mesh=None, num_data=num_shards, num_model=1,
+        num_rows=n, n_padded=n_padded, f_padded=base.total,
+        perm=perm, inv_perm=inv)
+
+
+@pytest.mark.parametrize("name", SAMPLER_NAMES)
+def test_pad_rows_never_sampled(name):
+    rng = np.random.default_rng(1)
+    gid = np.sort(rng.integers(0, 3, 23))
+    layout = _padded_layout(gid, 4)
+    assert (layout.perm < 0).any(), "layout must actually have pad rows"
+    w_pad = np.asarray(layout.pad_weights(rng.uniform(0.5, 2.0, 23)))
+    gid_pad = np.asarray(layout.pad_rows(jax.numpy.asarray(gid)))
+    pad_slots = layout.perm < 0
+    assert np.all(w_pad[pad_slots] == 0.0)
+    s = sampling.make_sampler(name, participation_rate=0.4)
+    part = s.sample_rounds(0, w_pad, gid_pad, 3, 50)
+    assert not part[:, pad_slots].any(), \
+        f"{name} sampler selected a pad row"
+
+
+def test_weight_proportional_pad_propensity_exactly_zero():
+    """Not merely unlikely: a zero-weight row has -inf logit AND is
+    masked out of the winner set, so its propensity is exactly 0 even
+    when k_m exceeds the eligible count."""
+    w = np.array([1.0, 1.0, 0.0, 0.0])
+    gid = np.zeros(4, np.int64)
+    s = sampling.WeightProportionalSampler(participation_rate=1.0 - 1e-9,
+                                           min_per_edge=4)
+    logit = s.logits(jax.random.PRNGKey(0), w)
+    assert np.isneginf(logit[2:]).all()
+    part = s.sample_rounds(0, w, gid, 1, 200)
+    assert not part[:, 2:].any()
+    assert part[:, :2].all()            # k_m clips to the eligible count
+
+
+def test_pad_mask_forces_pad_slots_false():
+    gid = np.sort(np.random.default_rng(2).integers(0, 3, 17))
+    layout = _padded_layout(gid, 4)
+    mask = np.ones(17, bool)            # every REAL row participates
+    hot = np.asarray(layout.pad_mask(mask))
+    assert hot[layout.perm >= 0].all()
+    assert not hot[layout.perm < 0].any()
+
+
+# ---------------------------------------------------------------------------
+# Streaming-vs-batch parity (single device; the 8-device mesh case lives
+# in tests/test_fl_shard.py).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["jnp", "kernel"])
+@pytest.mark.parametrize("chunk", [1, 7, None], ids=["c1", "c7", "cN"])
+def test_streaming_matches_batch(chunk, use_kernel):
+    rng = np.random.default_rng(3)
+    n, f, m = 33, 24, 4
+    buf = jax.numpy.asarray(rng.normal(0, 1, (n, f)), jax.numpy.float32)
+    w = rng.uniform(0.1, 2.0, n)
+    w[4] = 0.0
+    gid = rng.integers(0, m, n)
+    ref = aggregate.flat_edge_aggregate(buf, w, gid, m, use_kernel=False)
+    out = aggregate.streaming_edge_aggregate(
+        buf, w, gid, m, chunk_size=chunk or n, use_kernel=use_kernel)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_streaming_accumulator_residency_independent_of_n():
+    accs = [aggregate.StreamingEdgeAccumulator(4, 16) for _ in range(2)]
+    rng = np.random.default_rng(4)
+    for n, acc in zip((8, 512), accs):
+        acc.add(jax.numpy.asarray(rng.normal(0, 1, (n, 16)),
+                                  jax.numpy.float32),
+                rng.uniform(0.5, 1.0, n), rng.integers(0, 4, n))
+    assert accs[0].resident_bytes() == accs[1].resident_bytes()
+    assert accs[0].resident_bytes() == 4 * 16 * 4 + 4 * 4
+
+
+def test_streaming_empty_edge_is_exact_zero():
+    acc = aggregate.StreamingEdgeAccumulator(3, 8)
+    buf = jax.numpy.ones((4, 8), jax.numpy.float32)
+    acc.add(buf, np.ones(4), np.zeros(4, np.int64))
+    means = np.asarray(acc.edge_means())
+    assert np.all(means[1:] == 0.0)
+    assert np.all(np.isfinite(np.asarray(acc.cloud_mean())))
