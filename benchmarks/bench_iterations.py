@@ -1,6 +1,7 @@
 """Benchmark: optimal iteration counts (paper Figs. 2 and 3).
 
 Full-scale sweeps over eps and UEs/edge; CSV rows name,derived metrics.
+``--smoke`` trims both sweeps for CI while keeping every code path.
 """
 from __future__ import annotations
 
@@ -14,12 +15,16 @@ from repro.core.problem import HFLProblem
 BACKHAUL = dict(backhaul_rate_lo=1e6, backhaul_rate_hi=5e6)
 
 
-def run(csv_rows: list):
+def run(csv_rows: list, smoke: bool = False):
+    eps_sweep = ((0.25, 0.1) if smoke
+                 else (0.5, 0.4, 0.3, 0.25, 0.2, 0.15, 0.1, 0.05, 0.02, 0.01))
+    ues_sweep = (10, 40) if smoke else (10, 20, 40, 60, 80, 100)
+
     # Fig. 2: eps sweep, 5 edges x 20 UEs each
     prob = HFLProblem(num_edges=5, num_ues=100, seed=0, **BACKHAUL)
     A = assoc.proposed(prob)
     print("\n[Fig 2] eps     a*   b*    a*b        R    total[s]   solve[ms]")
-    for eps in (0.5, 0.4, 0.3, 0.25, 0.2, 0.15, 0.1, 0.05, 0.02, 0.01):
+    for eps in eps_sweep:
         prob.epsilon = eps
         t0 = time.perf_counter()
         s = iteropt.solve_direct(prob, A)
@@ -31,7 +36,7 @@ def run(csv_rows: list):
 
     # Fig. 3: UEs-per-edge sweep at eps=0.25
     print("\n[Fig 3] ues/edge   a*   b*   total[s]")
-    for ues in (10, 20, 40, 60, 80, 100):
+    for ues in ues_sweep:
         p = HFLProblem(num_edges=5, num_ues=5 * ues, epsilon=0.25, seed=1,
                        **BACKHAUL)
         A2 = assoc.proposed(p)
@@ -39,3 +44,11 @@ def run(csv_rows: list):
         print(f"      {ues:8d} {s.a_int:4d} {s.b_int:4d} {s.total:10.2f}")
         csv_rows.append(("fig3", f"ues={ues}", 0.0,
                          f"a={s.a_int};b={s.b_int};total={s.total:.2f}"))
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweeps for CI")
+    run([], smoke=ap.parse_args().smoke)

@@ -17,9 +17,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (bench_ablation, bench_association, bench_async,
                         bench_convergence, bench_faults, bench_iterations,
-                        bench_kernels, bench_optimizer, bench_roofline,
-                        bench_scale, bench_service, bench_serving,
-                        bench_shard, bench_stochastic)
+                        bench_jointopt, bench_kernels, bench_optimizer,
+                        bench_roofline, bench_scale, bench_service,
+                        bench_serving, bench_shard, bench_stochastic)
 
 SUITES = {
     "iterations": bench_iterations.run,     # Figs. 2-3
@@ -30,6 +30,7 @@ SUITES = {
     "shard": bench_shard.run,               # mesh-sharded aggregation
     "async": bench_async.run,               # sync eq. 34 vs async timeline
     "stochastic": bench_stochastic.run,     # makespan dists under draws
+    "jointopt": bench_jointopt.run,         # stochastic joint (a,b,s,bw)
     "faults": bench_faults.run,             # fault policies + FL quality
     "roofline": bench_roofline.run,         # EXPERIMENTS.md §Roofline
     "ablation": bench_ablation.run,         # beyond-paper ablations

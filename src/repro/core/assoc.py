@@ -300,6 +300,11 @@ def refined(problem: HFLProblem, a: float = 10.0,
       — the result the paper's Algorithm 2/3 (deterministic bound) can't
       express, since the p95 argmin differs from the mean argmin under
       heavy-tailed stragglers.
+    * ``"joint"`` — ``"quantile_makespan"`` with the per-cell uplink
+      bandwidth split (``core.jointopt.optimize_bandwidth``, beyond-paper
+      arXiv 2007.03462) re-optimized for EVERY candidate association, so
+      chi and bandwidth co-optimize around a ``jointopt.solve_joint``
+      tuple's (a, b, max_staleness).
 
     ``incremental=True`` (default, latency objective only) evaluates each
     trial move by DELTA: a move only changes the two touched edges'
@@ -325,6 +330,33 @@ def refined(problem: HFLProblem, a: float = 10.0,
                 problem, A, a, b, rounds=rounds,
                 max_staleness=max_staleness, model=delay_model,
                 key=delay_key, num_trials=num_trials, q=q)
+        return _refined_full_recompute(problem, a, max_moves, cap,
+                                       score=score)
+    if objective == "joint":
+        # Co-optimize chi with the stochastic joint tuple
+        # (core.jointopt): every candidate association is scored on the
+        # q-quantile async makespan at the caller's (a, b,
+        # max_staleness) with the per-cell bandwidth split RE-OPTIMIZED
+        # for that candidate — association, iteration counts, staleness
+        # and bandwidth move together ((a, b, max_staleness) come from a
+        # prior ``jointopt.solve_joint`` pass; a fixed ``delay_key``
+        # keeps the descent surface deterministic, as above).
+        from repro.core import jointopt
+        if delay_model is None:
+            from repro.core import stochastic
+            delay_model = stochastic.scenario("urban_stragglers").model
+
+        def score(A):
+            frac = jointopt.optimize_bandwidth(problem, A, a)
+            saved = problem.bandwidth_frac
+            problem.bandwidth_frac = frac
+            try:
+                return delay.quantile_makespan(
+                    problem, A, a, b, rounds=rounds,
+                    max_staleness=max_staleness, model=delay_model,
+                    key=delay_key, num_trials=num_trials, q=q)
+            finally:
+                problem.bandwidth_frac = saved
         return _refined_full_recompute(problem, a, max_moves, cap,
                                        score=score)
     if objective != "latency":

@@ -18,6 +18,12 @@ staleness lag.  ``async_completion`` reports the resulting makespan for the
 same communication work as ``rounds`` synchronous cloud rounds, which is
 <= the eq. 34 bound ``rounds * T`` (equal at ``max_staleness=0``).
 
+Bandwidth-aware rates (``repro.core.jointopt``): every eq. 5 upload time
+below flows through ``HFLProblem.t_com`` / ``HFLProblem.ue_bandwidth_alloc``,
+so setting ``problem.bandwidth_frac`` (the beyond-paper per-cell
+waterfilling split of arXiv 2007.03462) re-prices eqs. 33/34/38 and every
+stochastic draw consistently — no function here assumes the equal split.
+
 Stochastic extension (``repro.core.stochastic``): every function below
 that takes ``delay_model=``/``model=`` replaces the paper's constants with
 per-cycle draws — ``async_completion`` feeds a pre-sampled ``(C, M)``
@@ -429,6 +435,31 @@ def fault_makespan_distribution(problem: HFLProblem, assoc: np.ndarray, a,
         out[f"{n}_p50"] = float(np.quantile(ms[n], 0.5))
         out[f"{n}_p95"] = float(np.quantile(ms[n], 0.95))
         out[f"{n}_delivered_frac"] = float(df[n].mean())
+    return out
+
+
+def crn_async_makespans(cycles: np.ndarray, *, rounds: int,
+                        max_staleness: int) -> np.ndarray:
+    """Async makespans over PRE-SAMPLED per-trial cycle matrices.
+
+    The common-random-numbers draw-reuse half of
+    ``makespan_distribution``: callers that score many candidate
+    (a, b, max_staleness) tuples against ONE keyed ingredient draw
+    (``core.jointopt.IngredientDraws``) assemble each candidate's
+    ``(num_trials, C, M_active)`` cycle tensor from the same draws and
+    replay the event engine here — nothing is re-sampled between
+    candidates, so per-trial makespan gaps isolate the TUPLE, not the
+    noise.  Returns the (num_trials,) makespans; quantiles are the
+    caller's (``np.quantile`` is monotone in q by construction).
+    """
+    cycles = np.asarray(cycles, float)
+    rounds, max_staleness = int(rounds), int(max_staleness)
+    out = np.empty(cycles.shape[0])
+    for i in range(cycles.shape[0]):
+        tl = events.simulate_async(cycles[i, :rounds + max_staleness],
+                                   rounds=rounds,
+                                   max_staleness=max_staleness)
+        out[i] = tl.makespan
     return out
 
 

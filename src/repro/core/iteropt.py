@@ -51,6 +51,43 @@ def _tau_coeffs(problem: HFLProblem, assoc: np.ndarray):
     return t_cmp, t_com
 
 
+def validate_inputs(problem: HFLProblem, assoc: np.ndarray,
+                    a_min: float = 1.0, a_max: float = np.inf,
+                    b_min: float = 1.0, b_max: float = np.inf) -> None:
+    """Reject infeasible solver inputs with ``ValueError`` (never garbage).
+
+    Checks the search box (finite, positive, ``a_max >= a_min`` /
+    ``b_max >= b_min``), the learning constants eq. 15 needs
+    (``0 < epsilon < 1``, ``zeta > 0``, ``gamma > 0``, ``big_c > 0``) and
+    that the round time T (eq. 34) is positive and finite at the box
+    corner — a degenerate association (no active edge) or corrupted
+    delay terms would otherwise silently minimize over a flat-zero or
+    NaN surface.
+    """
+    for name, lo, hi in (("a", a_min, a_max), ("b", b_min, b_max)):
+        if not (np.isfinite(lo) and lo > 0):
+            raise ValueError(f"{name}_min must be finite and > 0, got {lo}")
+        if not (hi >= lo):          # also catches NaN
+            raise ValueError(f"{name}_max must be >= {name}_min "
+                             f"({lo}), got {hi}")
+    if not (0.0 < problem.epsilon < 1.0):
+        raise ValueError(f"epsilon must be in (0, 1) for eq. 15, got "
+                         f"{problem.epsilon}")
+    for name in ("zeta", "gamma", "big_c"):
+        v = getattr(problem, name)
+        if not (np.isfinite(v) and v > 0):
+            raise ValueError(f"{name} must be finite and > 0, got {v}")
+    A = np.asarray(assoc)
+    if A.shape != (problem.num_ues, problem.num_edges):
+        raise ValueError(f"assoc shape {A.shape} != "
+                         f"({problem.num_ues}, {problem.num_edges})")
+    t = delay.cloud_round_time(problem, A, a_min, b_min)
+    if not (np.isfinite(t) and t > 0):
+        raise ValueError(f"round time T(a={a_min}, b={b_min}) = {t} is not "
+                         "a positive finite number (no active edge, or "
+                         "degenerate delay terms)")
+
+
 def b_min_for_mu(problem: HFLProblem, a: float) -> float:
     """Smallest b with edge accuracy mu(a,b) <= eps (the mu-feasibility
     coupling).  Eq. (15) alone makes argmin(a,b) INDEPENDENT of eps
@@ -87,13 +124,18 @@ def _round_best(problem, assoc, a, b, constrain_mu=False) -> Tuple[int, int, flo
 
 def solve_direct(problem: HFLProblem, assoc: np.ndarray,
                  a_max: float = 200.0, b_max: float = 200.0,
-                 constrain_mu: bool = True) -> IterSolution:
+                 constrain_mu: bool = True,
+                 a_min: float = 1.0, b_min: float = 1.0) -> IterSolution:
     """Minimize R*T over the relaxed (a,b) box; multi-start Nelder-Mead in
     log-space (robust to the max() kinks), then integer rounding.
 
     ``constrain_mu`` enforces mu(a,b) <= eps by clamping b to b_min(a)
     (see ``b_min_for_mu``); pass False for the raw eq. (13)/(15) problem.
+    Infeasible boxes (``a_max < a_min``, non-positive bounds) or
+    degenerate problems (non-positive round time T, epsilon outside
+    (0,1)) raise ``ValueError`` — see ``validate_inputs``.
     """
+    validate_inputs(problem, assoc, a_min, a_max, b_min, b_max)
 
     def f(x):
         a = np.exp(x[0])
@@ -112,7 +154,8 @@ def solve_direct(problem: HFLProblem, assoc: np.ndarray,
     a, b = np.exp(best_x)
     if constrain_mu:
         b = max(b, b_min_for_mu(problem, a))
-    a, b = min(a, a_max), min(b, b_max)
+    a = min(max(a, a_min), a_max)
+    b = min(max(b, b_min), b_max)
     ai, bi, v = _round_best(problem, assoc, a, b, constrain_mu)
     r = float(delay.cloud_rounds(ai, bi, epsilon=problem.epsilon,
                                  zeta=problem.zeta, gamma=problem.gamma,
@@ -194,7 +237,10 @@ def solve_dual(problem: HFLProblem, assoc: np.ndarray,
     stability) with totals fixed by the conditions above — with relaxation
     factor ``eta``.  DESIGN.md §6 records this as a deviation: the printed
     algorithm is under-determined, this is its KKT-faithful completion.
+    Like ``solve_direct``, degenerate inputs raise ``ValueError``
+    (``validate_inputs``) instead of iterating on garbage.
     """
+    validate_inputs(problem, assoc)
     N, M = problem.num_ues, problem.num_edges
     t_cmp = problem.t_cmp()
     t_com = problem.t_com(assoc)

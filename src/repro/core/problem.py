@@ -46,6 +46,12 @@ class HFLProblem:
     big_c: float = 1.0                     # C in eq. (14)
     epsilon: float = 0.25                  # global accuracy target
     seed: int = 0
+    # --- beyond-paper: per-UE uplink bandwidth fractions --------------------
+    # (N,) share of the serving edge's bandwidth B granted to each UE
+    # inside the eq. 4 rate; ``None`` is the paper's equal split
+    # B/|N_m|.  Set by ``core.jointopt.optimize_bandwidth`` (the convex
+    # per-cell waterfilling split of arXiv 2007.03462).
+    bandwidth_frac: Optional[np.ndarray] = None
 
     # --- generated fields ---------------------------------------------------
     ue_pos: Optional[np.ndarray] = None        # (N, 2)
@@ -101,13 +107,31 @@ class HFLProblem:
         bn = self.bandwidth_total / np.maximum(counts, 1)[None, :]
         return bn * np.log2(1.0 + self.snr())
 
+    def ue_bandwidth_alloc(self, assoc: np.ndarray) -> np.ndarray:
+        """Per-UE uplink bandwidth B_n under ``assoc``, shape (N,).
+
+        The eq. 4 split: equal B/|N_m| by default, or the beyond-paper
+        ``bandwidth_frac``-weighted split B_n = frac_n * B when set
+        (``core.jointopt.optimize_bandwidth``).  UEs with an all-zero
+        association row get 0 (they never upload).
+        """
+        assoc = np.asarray(assoc)
+        assigned = assoc.sum(1) > 0
+        if self.bandwidth_frac is not None:
+            bn = self.bandwidth_total * np.asarray(self.bandwidth_frac, float)
+        else:
+            counts = assoc.sum(0)
+            gid = assoc.argmax(1)
+            bn = self.bandwidth_total / np.maximum(counts, 1)[gid]
+        return np.where(assigned, bn, 0.0)
+
     def t_com(self, assoc: np.ndarray) -> np.ndarray:
         """eq. (5): per-UE upload time under association matrix (N, M) 0/1."""
-        counts = assoc.sum(0)
-        r = self.rate(counts)
+        bn = self.ue_bandwidth_alloc(assoc)
         t = np.zeros(self.num_ues)
         n_idx, m_idx = np.nonzero(assoc)
-        t[n_idx] = self.model_bits / r[n_idx, m_idx]
+        r = bn[n_idx] * np.log2(1.0 + self.snr()[n_idx, m_idx])
+        t[n_idx] = self.model_bits / r
         return t
 
     def t_edge_cloud(self) -> np.ndarray:

@@ -75,6 +75,42 @@ def plan(problem: HFLProblem, *, association: str = "proposed",
     )
 
 
+def plan_joint(problem: HFLProblem, *, scenario: str = "urban_stragglers",
+               association: str = "proposed", seed: int = 0,
+               q: float = 0.95, num_trials: int = 16, key=0,
+               **joint_kw) -> HFLSchedule:
+    """Stochastic joint pipeline: association, then ``jointopt.solve_joint``.
+
+    Beyond-paper counterpart of ``plan``: (a, b) come from the
+    q-quantile time-to-target under the named scenario jointly with
+    ``max_staleness`` and the per-cell bandwidth split, which is APPLIED
+    to ``problem.bandwidth_frac`` so the runtime's eq. 4/5 rates (and
+    every stochastic draw) price the optimized split.  The winning
+    staleness bound rides in ``meta["max_staleness"]`` —
+    ``HFLSimulator(..., mode="async", max_staleness=None)`` picks it up.
+    """
+    from repro.core import jointopt
+
+    assoc = assoc_lib.STRATEGIES[association](problem, seed=seed)
+    sol = jointopt.solve_joint(problem, assoc, model=scenario, q=q,
+                               num_trials=num_trials, key=key, **joint_kw)
+    if sol.bandwidth_frac is not None:
+        problem.bandwidth_frac = sol.bandwidth_frac
+    bd = delay.objective_breakdown(problem, assoc, sol.a, sol.b)
+    return HFLSchedule(
+        a=sol.a, b=sol.b,
+        rounds=max(1, int(sol.rounds)),
+        assoc=assoc, total_delay=bd["total"],
+        cloud_round_time=bd["T"], edge_round_time=bd["tau"],
+        problem=problem,
+        meta={"association": association, "solver": "joint",
+              "scenario": scenario, "max_staleness": sol.max_staleness,
+              "objective_q": sol.q, "objective": sol.objective,
+              "bandwidth": sol.bandwidth,
+              "theta": bd["theta"], "mu": bd["mu"]},
+    )
+
+
 # ---------------------------------------------------------------------------
 # Hardware adaptation: TPU cluster as the "wireless network"
 # ---------------------------------------------------------------------------

@@ -277,8 +277,12 @@ class FadingChannel(DelayModel):
         assoc = np.asarray(assoc)
         N = problem.num_ues
         gid = assoc.argmax(1)
-        counts = assoc.sum(0)
-        bn = problem.bandwidth_total / np.maximum(counts, 1)[gid]    # (N,)
+        # eq. 4 bandwidth split — equal B/|N_m| or the per-UE
+        # ``problem.bandwidth_frac`` waterfilling split (core.jointopt);
+        # unassigned rows fall back to B so their (discarded) draws stay
+        # finite, like the pre-split behavior.
+        bn = problem.ue_bandwidth_alloc(assoc)                       # (N,)
+        bn = np.where(bn > 0, bn, problem.bandwidth_total)
         snr0 = problem.snr()[np.arange(N), gid]                      # (N,)
         kf, ks = jax.random.split(key)
         fade = jnp.ones((num_draws, N))

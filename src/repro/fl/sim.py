@@ -92,7 +92,8 @@ class HFLSimulator:
                  init_params, ue_data: List[dict], *, lr: float = 0.05,
                  solver: str = "gd", dane_mu: float = 0.1,
                  samples_per_ue: Optional[int] = None, seed: int = 0,
-                 mesh=None, mode: str = "sync", max_staleness: int = 0,
+                 mesh=None, mode: str = "sync",
+                 max_staleness: Optional[int] = 0,
                  staleness_decay: float = 0.9, delay_model=None,
                  delay_seed: int = 0, fault_model=None, fault_policy=None,
                  fault_seed: int = 0, sampler=None, sample_seed: int = 0):
@@ -137,6 +138,10 @@ class HFLSimulator:
         paths (byte-identical, like a null fault model)."""
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
+        if max_staleness is None:
+            # Joint-planned schedules (core.schedule.plan_joint) carry the
+            # co-optimized SSP bound; None means "take the schedule's".
+            max_staleness = int(schedule.meta.get("max_staleness", 0))
         if mode == "async" and solver != "gd":
             raise ValueError("mode='async' supports solver='gd' only (DANE's "
                              "global gradient assumes a synchronized fleet)")

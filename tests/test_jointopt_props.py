@@ -1,0 +1,303 @@
+"""Property suite for the stochastic joint optimizer (core.jointopt).
+
+Properties (hypothesis-driven where the space is searchable):
+  * deterministic-scenario reduction: solve_joint on ``DeterministicDelays``
+    returns EXACTLY ``iteropt.solve_direct``'s (a, b);
+  * the q-quantile objective is monotone non-decreasing in q;
+  * the constrained-mu optimum never uses fewer edge rounds than the
+    unconstrained one (b*_con >= b*_unc);
+  * symmetric cells recover the equal bandwidth split;
+  * common random numbers: the same key yields a bit-stable ranking and
+    identical ingredient draws across repeated evaluations;
+  * brute-force grid cross-check on a small (a, b, s) box.
+
+Plus negative-path validation for ``iteropt`` (satellite: infeasible
+bounds raise ``ValueError``) and the plan_joint -> HFLSimulator
+staleness plumbing.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import assoc as assoc_lib
+from repro.core import delay, iteropt, jointopt, schedule, stochastic
+from repro.core.problem import HFLProblem
+
+UES, EDGES = 12, 3
+
+
+def _prob(seed=0, **kw):
+    return HFLProblem(num_edges=EDGES, num_ues=UES, seed=seed, **kw)
+
+
+def _setup(seed=0):
+    p = _prob(seed)
+    return p, assoc_lib.proposed(p)
+
+
+# ---------------------------------------------------------------------------
+# Property 1: deterministic reduction to solve_direct
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6)
+@given(seed=st.integers(min_value=0, max_value=30),
+       constrain=st.booleans())
+def test_deterministic_reduces_to_solve_direct(seed, constrain):
+    prob, A = _setup(seed)
+    det = iteropt.solve_direct(prob, A, constrain_mu=constrain)
+    sol = jointopt.solve_joint(prob, A, model="deterministic",
+                               constrain_mu=constrain, num_trials=2,
+                               rounds_cap=12, optimize_bw=False)
+    assert (sol.a, sol.b) == (det.a_int, det.b_int)
+    assert (sol.deterministic_anchor.a_int,
+            sol.deterministic_anchor.b_int) == (det.a_int, det.b_int)
+    # zero variance: every trial's makespan is identical, so any quantile
+    # of the s=0 candidate equals ceil(R) * T (eq. 34) exactly.
+    s0 = [h for h in sol.history if h[:3] == (sol.a, sol.b, 0)]
+    T = delay.cloud_round_time(prob, A, sol.a, sol.b)
+    np.testing.assert_allclose(s0[0][4], sol.rounds * T, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Property 2: objective monotone non-decreasing in q
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8)
+@given(a=st.integers(min_value=1, max_value=12),
+       b=st.integers(min_value=1, max_value=6),
+       s=st.sampled_from([0, 1, 3]),
+       key=st.integers(min_value=0, max_value=10))
+def test_objective_monotone_in_q(a, b, s, key):
+    prob, A = _setup(0)
+    model = stochastic.scenario("urban_stragglers").model
+    draws = jointopt.sample_ingredients(model, key, prob, A, num_trials=8,
+                                        cycles=12 + s, b_max=b)
+    objs = [jointopt.evaluate_tuple(prob, A, a, b, s, draws=draws, q=q,
+                                    rounds_cap=12)
+            for q in (0.1, 0.25, 0.5, 0.75, 0.9, 0.99)]
+    assert all(np.isfinite(objs))
+    assert all(lo <= hi + 1e-12 for lo, hi in zip(objs, objs[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Property 3: constrained-mu b* >= unconstrained b*
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 3, 5])
+def test_constrained_mu_needs_at_least_as_many_edge_rounds(seed):
+    prob, A = _setup(seed)
+    kw = dict(model="urban_stragglers", num_trials=6, key=seed,
+              rounds_cap=12, staleness_grid=(0, 1, 2), optimize_bw=False)
+    con = jointopt.solve_joint(prob, A, constrain_mu=True, **kw)
+    unc = jointopt.solve_joint(prob, A, constrain_mu=False, **kw)
+    assert con.b >= unc.b
+    # the constrained winner satisfies the paper's mu <= 1 floor (eq. 27)
+    assert con.b >= iteropt.b_min_for_mu(prob, con.a) - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Property 4: symmetric cells recover the equal split
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6)
+@given(a=st.integers(min_value=1, max_value=20),
+       per_edge=st.sampled_from([2, 4, 6]))
+def test_symmetric_cells_recover_equal_split(a, per_edge):
+    n = EDGES * per_edge
+    p = HFLProblem(num_edges=EDGES, num_ues=n, seed=0)
+    # flatten every source of heterogeneity: identical compute and SNR
+    p.cycles[:] = p.cycles.mean()
+    p.samples[:] = 400.0
+    p.gains[:, :] = p.gains.mean()
+    A = np.zeros((n, EDGES))
+    A[np.arange(n), np.arange(n) % EDGES] = 1.0
+    frac = jointopt.optimize_bandwidth(p, A, a)
+    np.testing.assert_allclose(frac, 1.0 / per_edge, rtol=1e-6)
+    # per-cell fractions always sum to one, symmetric or not
+    for m in range(EDGES):
+        np.testing.assert_allclose(frac[A[:, m] > 0].sum(), 1.0, rtol=1e-12)
+
+
+def test_waterfilling_weakly_improves_deterministic_bottleneck():
+    """On the DETERMINISTIC per-round time, the optimized split can only
+    lower (or match) every cell's bottleneck vs. the equal split."""
+    prob, A = _setup(2)
+    a = 6
+    tau_eq = delay.edge_round_time(prob, A, a)
+    frac = jointopt.optimize_bandwidth(prob, A, a)
+    prob.bandwidth_frac = frac
+    try:
+        tau_opt = delay.edge_round_time(prob, A, a)
+    finally:
+        prob.bandwidth_frac = None
+    assert np.all(tau_opt <= tau_eq + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Property 5: common random numbers — seeded stability
+# ---------------------------------------------------------------------------
+
+def test_crn_same_key_gives_identical_ranking():
+    prob, A = _setup(1)
+    kw = dict(model="flaky_uplink", num_trials=6, key=7, rounds_cap=12,
+              staleness_grid=(0, 2), optimize_bw=True)
+    s1 = jointopt.solve_joint(prob, A, **kw)
+    s2 = jointopt.solve_joint(prob, A, **kw)
+    assert s1.history == s2.history          # bit-stable ranking
+    assert (s1.a, s1.b, s1.max_staleness, s1.bandwidth,
+            s1.objective) == (s2.a, s2.b, s2.max_staleness, s2.bandwidth,
+                              s2.objective)
+
+
+def test_crn_ingredient_draws_keyed():
+    prob, A = _setup(1)
+    model = stochastic.scenario("urban_stragglers").model
+    mk = lambda k: jointopt.sample_ingredients(model, k, prob, A,
+                                               num_trials=4, cycles=6,
+                                               b_max=3)
+    d1, d2, d3 = mk(11), mk(11), mk(12)
+    np.testing.assert_array_equal(d1.compute, d2.compute)
+    np.testing.assert_array_equal(d1.uplink, d2.uplink)
+    np.testing.assert_array_equal(d1.backhaul, d2.backhaul)
+    assert not np.array_equal(d1.uplink, d3.uplink)
+
+
+# ---------------------------------------------------------------------------
+# Property 6: brute-force grid cross-check
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("key", [0, 5])
+def test_brute_force_grid_crosscheck(key):
+    prob, A = _setup(0)
+    model = stochastic.scenario("urban_stragglers").model
+    a_grid, b_grid, s_grid = (2, 5, 9), (2, 4), (0, 2)
+    rounds_cap = 12
+    draws = jointopt.sample_ingredients(
+        model, key, prob, A, num_trials=6,
+        cycles=rounds_cap + max(s_grid), b_max=max(b_grid))
+    sol = jointopt.solve_joint(prob, A, model=model, key=key,
+                               a_candidates=a_grid, b_candidates=b_grid,
+                               staleness_grid=s_grid, constrain_mu=False,
+                               optimize_bw=False, rounds_cap=rounds_cap,
+                               draws=draws)
+    best = None
+    for a in a_grid:
+        for b in b_grid:
+            for s in s_grid:
+                obj = jointopt.evaluate_tuple(prob, A, a, b, s, draws=draws,
+                                              rounds_cap=rounds_cap)
+                rank = (obj, s, b, a)
+                if best is None or rank < best:
+                    best = rank
+    assert (sol.objective, sol.max_staleness, sol.b, sol.a) == best
+    assert len(sol.history) == len(a_grid) * len(b_grid) * len(s_grid)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: iteropt input validation (negative paths)
+# ---------------------------------------------------------------------------
+
+def test_iteropt_rejects_inverted_a_box():
+    prob, A = _setup(0)
+    with pytest.raises(ValueError):
+        iteropt.solve_direct(prob, A, a_min=10.0, a_max=2.0)
+
+
+def test_iteropt_rejects_inverted_b_box():
+    prob, A = _setup(0)
+    with pytest.raises(ValueError):
+        iteropt.solve_direct(prob, A, b_min=8.0, b_max=1.0)
+
+
+def test_iteropt_rejects_nonpositive_and_nan_bounds():
+    prob, A = _setup(0)
+    with pytest.raises(ValueError):
+        iteropt.solve_direct(prob, A, a_min=0.0)
+    with pytest.raises(ValueError):
+        iteropt.solve_direct(prob, A, a_max=float("nan"))
+
+
+def test_iteropt_rejects_bad_epsilon_and_constants():
+    prob, A = _setup(0)
+    prob.epsilon = 1.5
+    with pytest.raises(ValueError):
+        iteropt.solve_direct(prob, A)
+    prob.epsilon = 0.25
+    prob.zeta = -1.0
+    with pytest.raises(ValueError):
+        iteropt.solve_dual(prob, A)
+
+
+def test_iteropt_rejects_degenerate_round_time():
+    """An all-zero association gives a non-positive cloud round time."""
+    prob, _ = _setup(0)
+    empty = np.zeros((UES, EDGES))
+    with pytest.raises(ValueError):
+        iteropt.solve_direct(prob, empty)
+
+
+def test_iteropt_rejects_wrong_assoc_shape():
+    prob, _ = _setup(0)
+    with pytest.raises(ValueError):
+        iteropt.solve_direct(prob, np.ones((UES + 1, EDGES)))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: plan_joint / simulator plumbing + joint association hook
+# ---------------------------------------------------------------------------
+
+def test_plan_joint_meta_and_bandwidth_application():
+    prob = _prob(0)
+    sch = schedule.plan_joint(prob, scenario="urban_stragglers",
+                              num_trials=4, rounds_cap=12,
+                              staleness_grid=(0, 1, 2))
+    assert sch.meta["solver"] == "joint"
+    assert sch.meta["scenario"] == "urban_stragglers"
+    assert sch.meta["max_staleness"] in (0, 1, 2)
+    assert sch.meta["bandwidth"] in ("equal", "optimized")
+    assert np.isfinite(sch.meta["objective"])
+    if sch.meta["bandwidth"] == "optimized":
+        assert prob.bandwidth_frac is not None
+    assert sch.rounds >= 1 and sch.a >= 1 and sch.b >= 1
+
+
+def test_simulator_inherits_schedule_staleness():
+    import jax
+
+    from repro.data import partition, synthetic
+    from repro.fl.sim import HFLSimulator
+    from repro.models import lenet
+
+    prob = HFLProblem(num_edges=2, num_ues=6, seed=0,
+                      samples_lo=40, samples_hi=80)
+    sch = schedule.plan_joint(prob, scenario="deterministic",
+                              num_trials=2, rounds_cap=8,
+                              staleness_grid=(0, 2))
+    sch.meta["max_staleness"] = 2          # force a non-default bound
+    train = synthetic.logreg_data(seed=0, n=400, dim=8, num_classes=3)
+    rng = np.random.default_rng(0)
+    parts = partition.size_partition(rng, 400, prob.samples.astype(int))
+    ue_data = [{k: train[k][ix] for k in train} for ix in parts]
+    init = lenet.logreg_init(jax.random.PRNGKey(0), 8, 3)
+    sim = HFLSimulator(sch, lambda p, b: lenet.logreg_loss(p, b, l2=1e-3),
+                       init, ue_data, mode="async", max_staleness=None)
+    assert sim.max_staleness == 2
+    explicit = HFLSimulator(sch, lambda p, b: lenet.logreg_loss(p, b),
+                            init, ue_data, mode="async", max_staleness=1)
+    assert explicit.max_staleness == 1
+
+
+def test_refined_joint_objective_returns_valid_association():
+    prob = _prob(4)
+    A = assoc_lib.refined(prob, objective="joint", max_moves=20,
+                          num_trials=8)
+    assert A.shape == (UES, EDGES)
+    np.testing.assert_array_equal(A.sum(axis=1), np.ones(UES))
+    assert prob.bandwidth_frac is None     # hook restores the problem
+    model = stochastic.scenario("urban_stragglers").model
+    assert np.isfinite(delay.quantile_makespan(
+        prob, A, 6, 3, rounds=4, max_staleness=1, model=model,
+        num_trials=6))
