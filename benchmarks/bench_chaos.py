@@ -1,0 +1,130 @@
+"""Benchmark: the always-on control plane UNDER INJECTED FAULTS.
+
+For each fault scenario the service runs a delay workload where that
+failure mode is the actual bottleneck (churn and uplink loss bite when
+cycles are tight — ``deterministic``; outages bite when cycle times
+straggle — ``urban_stragglers``), three ways under common random
+numbers:
+
+* **fault-free**   — the same workload with no fault model (baseline);
+* **protected**    — ``deadline_failover`` policy + overload shedding:
+  deadline cuts and capped retries price into the cycle, outages void
+  and fail over, dead cohorts shed at the cloud;
+* **unprotected**  — ``wait_for_all`` + no shedding: the naive fleet
+  waits for churned-out UEs, retransmits forever and stalls behind
+  down edges inside the SSP floor.
+
+The acceptance bar of the PR (``benchmarks/BENCH_chaos.json``): the
+protected service holds p95 cycle latency (departure -> publish) within
+``PROTECTED_FACTOR``x the fault-free baseline on EVERY scenario, while
+the unprotected configuration exceeds that bound on every scenario —
+the fault handling is what keeps the SLO, not slack in the fault
+processes.
+
+``--smoke`` (the CI entry) shrinks the event budget but keeps every
+assertion.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import faults, stochastic
+from repro.launch.service import (HFLService, Segment, ServiceConfig,
+                                  default_service_sim)
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "BENCH_chaos.json")
+
+N_UES, N_EDGES = 48, 4
+MAX_STALENESS = 4
+EVENTS = 250
+FAULT_SEED = 7
+PROTECTED_FACTOR = 2.0      # protected p95 must stay within this x
+                            # fault-free; unprotected must exceed it
+
+# Each fault scenario vs the delay workload where it is the bottleneck.
+PAIRINGS = (("ue_churn", "deterministic"),
+            ("edge_outage", "urban_stragglers"),
+            ("lossy_uplink", "deterministic"))
+
+
+def _run(delay: str, events: int, fault=None, policy=None,
+         shed: bool = True) -> HFLService:
+    cfg = ServiceConfig(
+        segments=(Segment(delay, 1.0, float("inf")),),
+        max_staleness=MAX_STALENESS, shed=shed,
+        fault_model=fault, fault_policy=policy, fault_seed=FAULT_SEED)
+    svc = HFLService(
+        default_service_sim(N_UES, N_EDGES, max_staleness=MAX_STALENESS),
+        cfg)
+    svc.run(events)
+    return svc
+
+
+def _p95(svc: HFLService) -> float:
+    lat = [r["latency"] for r in svc.trace if r["kind"] == "merge"]
+    return float(np.percentile(lat, 95)) if lat else float("inf")
+
+
+def run(csv_rows: list, smoke: bool = False):
+    events = 100 if smoke else EVENTS
+    out = []
+    base_p95 = {}
+    for delay in dict(PAIRINGS).values():
+        if delay not in base_p95:
+            svc = _run(delay, events)
+            base_p95[delay] = _p95(svc)
+            out.append(dict(case=f"fault_free_{delay}",
+                            p95=base_p95[delay],
+                            applied=svc.applied, events=events))
+            print(f"\n[chaos] fault-free @{delay}: "
+                  f"p95={base_p95[delay]:.2f}s applied={svc.applied}")
+
+    for name, delay in PAIRINGS:
+        fm = stochastic.scenario(name).faults
+        rows = {}
+        for prot in (True, False):
+            svc = _run(delay, events, fault=fm,
+                       policy=(None if prot
+                               else faults.wait_for_all_policy()),
+                       shed=prot)
+            p95 = _p95(svc)
+            ratio = p95 / base_p95[delay]
+            label = "protected" if prot else "unprotected"
+            s = svc.summary()
+            rows[prot] = dict(case=f"{name}_{label}", delay=delay,
+                              p95=p95, ratio=ratio,
+                              applied=s["applied"],
+                              fault_shed=s["fault_shed"],
+                              shed=s["shed"])
+            out.append(rows[prot])
+            print(f"[chaos] {name:14s} {label:11s} p95={p95:8.2f}s "
+                  f"ratio={ratio:5.2f}x applied={s['applied']} "
+                  f"fault_shed={s['fault_shed']}")
+            csv_rows.append(("chaos", f"{name}_{label}", p95 * 1e6,
+                             f"ratio={ratio:.2f};"
+                             f"fault_shed={s['fault_shed']}"))
+        assert rows[True]["ratio"] <= PROTECTED_FACTOR, (
+            f"{name}: the protected service must hold p95 within "
+            f"{PROTECTED_FACTOR}x fault-free", rows[True])
+        assert rows[False]["ratio"] > PROTECTED_FACTOR, (
+            f"{name}: the unprotected baseline should NOT meet the "
+            f"{PROTECTED_FACTOR}x bound — if it does, the faults are "
+            "too mild to demonstrate anything", rows[False])
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[chaos] wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink event budgets (CI); keeps all assertions")
+    args = ap.parse_args()
+    rows: list = []
+    run(rows, smoke=args.smoke)

@@ -16,10 +16,11 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (bench_ablation, bench_association, bench_async,
-                        bench_convergence, bench_faults, bench_iterations,
-                        bench_jointopt, bench_kernels, bench_optimizer,
-                        bench_roofline, bench_scale, bench_service,
-                        bench_serving, bench_shard, bench_stochastic)
+                        bench_chaos, bench_convergence, bench_faults,
+                        bench_iterations, bench_jointopt, bench_kernels,
+                        bench_optimizer, bench_roofline, bench_scale,
+                        bench_service, bench_serving, bench_shard,
+                        bench_stochastic)
 
 SUITES = {
     "iterations": bench_iterations.run,     # Figs. 2-3
@@ -37,6 +38,7 @@ SUITES = {
     "serving": bench_serving.run,           # decode throughput (smoke)
     "service": bench_service.run,           # always-on control plane SLOs
     "scale": bench_scale.run,               # million-UE sampling/streaming
+    "chaos": bench_chaos.run,               # faulted service SLOs + GC
 }
 
 

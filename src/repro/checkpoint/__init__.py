@@ -1,5 +1,6 @@
-from repro.checkpoint.npz import (CheckpointError, latest_checkpoint,
-                                  list_checkpoints, load_pytree, save_pytree)
+from repro.checkpoint.npz import (CheckpointError, gc_checkpoints,
+                                  latest_checkpoint, list_checkpoints,
+                                  load_pytree, save_pytree)
 
 __all__ = ["save_pytree", "load_pytree", "CheckpointError",
-           "latest_checkpoint", "list_checkpoints"]
+           "latest_checkpoint", "list_checkpoints", "gc_checkpoints"]

@@ -215,3 +215,38 @@ def latest_checkpoint(ckpt_dir: str, prefix: str = "ckpt-") -> Optional[str]:
     out to be damaged."""
     paths = list_checkpoints(ckpt_dir, prefix)
     return paths[-1] if paths else None
+
+
+def gc_checkpoints(ckpt_dir: str, keep_last_k: int,
+                   prefix: str = "ckpt-") -> List[str]:
+    """Compact the cadence directory down to the newest ``keep_last_k``
+    checkpoints.  Returns the paths it deleted (oldest first).
+
+    Crash safety rests on the DELETION ORDER: victims are removed oldest
+    first (delete-newest-last), so a crash at ANY point of the delete
+    sequence leaves the surviving files as a suffix of the cadence — the
+    newest ``keep_last_k`` generations are intact and every gap sits
+    strictly BELOW the oldest survivor.  ``restore_latest``-style readers
+    (newest first, falling back on ``CheckpointError``) therefore always
+    find the same restore frontier they would have found had the GC
+    completed; an interrupted GC only means the next GC pass has more
+    old files to collect.
+
+    A missing victim (already collected by a concurrent/previous pass)
+    is skipped, not an error.  ``keep_last_k`` must be >= 1 — a GC that
+    could delete the newest checkpoint would defeat the whole durability
+    story; disable GC by not calling this instead.
+    """
+    if keep_last_k < 1:
+        raise ValueError(f"keep_last_k must be >= 1 to garbage-collect "
+                         f"(the newest checkpoint is never deletable), "
+                         f"got {keep_last_k}")
+    paths = list_checkpoints(ckpt_dir, prefix)
+    deleted: List[str] = []
+    for path in paths[:-keep_last_k]:     # ascending: oldest deleted first
+        try:
+            os.remove(path)
+        except FileNotFoundError:
+            continue
+        deleted.append(path)
+    return deleted

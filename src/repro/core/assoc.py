@@ -189,6 +189,18 @@ def _latency_terms(problem: HFLProblem, a: float):
     return t_fix, t_unit
 
 
+def orphans_of(assoc: np.ndarray, dead_edges) -> np.ndarray:
+    """UE indices orphaned when ``dead_edges`` go down: assigned rows
+    whose home edge is dead.  The same membership rule ``failover`` uses
+    to pick what it re-homes — exposed so callers (the always-on
+    service's segment-boundary failover) can report/trace the orphan set
+    without re-deriving it."""
+    A = np.asarray(assoc)
+    dead = np.atleast_1d(np.asarray(dead_edges, dtype=int)).ravel()
+    assigned = A.sum(1) > 0
+    return np.flatnonzero(assigned & np.isin(A.argmax(1), dead))
+
+
 def failover(problem: HFLProblem, assoc: np.ndarray, dead_edges,
              a: float = 10.0) -> np.ndarray:
     """BEYOND-PAPER: incremental re-association after edge failures.

@@ -316,6 +316,13 @@ class AsyncEngine:
         for w in self.win:
             w.sort()
         self.have_outages = any(self.win)
+        if self.failover and self.have_outages and self._barrier:
+            # Same contract simulate_async enforces before construction;
+            # direct engine users (the always-on service) hit it here.
+            raise ValueError("failover needs max_staleness >= 1 (the "
+                             "barrier has no staleness floor to relax); "
+                             "run the wait-for-all baseline at "
+                             "max_staleness=0 instead")
         # -- dynamic state (everything snapshot() captures) -----------------
         self.heap: list = []                # (arrival_t, edge, cycle)
         self.completed = np.zeros(self.M, dtype=np.int64)

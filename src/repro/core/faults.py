@@ -467,3 +467,77 @@ def faulty_cycle_stats(fault_model: FaultModel, policy: FaultPolicy, key,
                         survivors=survivors,
                         delivered_frac=delivered_frac,
                         windows=windows, down=down, stall=stall)
+
+
+# ---------------------------------------------------------------------------
+# Key-offset resumable fault sampling (the always-on service, PR 10).
+# ---------------------------------------------------------------------------
+
+
+class FaultCycleSource:
+    """Lazy, replay-stable view of the infinite faulty-cycle timeline.
+
+    The batch entry point ``faulty_cycle_stats(key, num_cycles=C)`` draws
+    all ``C`` cycles from one key, so requesting a different cycle count
+    changes EVERY row — a resumed service could not reproduce the draws
+    its crashed predecessor consumed.  This mirrors
+    ``stochastic.CycleTimeSource``'s fix: chunk ``i`` of the virtual
+    infinite timeline is ``faulty_cycle_stats`` under ``fold_in(key, i)``
+    with ``num_cycles=block``, making cycle ``c``'s policy-adjusted cost
+    row and UE survivor mask pure functions of ``(key, c // block)`` —
+    independent of how many cycles were drawn before, in what order, or
+    by which process.  Each chunk's rows are BYTE-IDENTICAL to a direct
+    ``faulty_cycle_stats`` call at that chunk's key (the service-vs-batch
+    exactness the chaos tests assert).
+
+    Outage windows are deliberately NOT drawn here (the stored model has
+    ``outage=None``): windows are wall-clock, so chunk-local draws would
+    be meaningless — the service materializes one window set over a fixed
+    horizon at construction and hands it to the event engine.  Chunking
+    also truncates cross-chunk fault memory at chunk boundaries
+    (``MarkovChurn`` streaks restart from the stationary law every
+    ``block`` cycles; the naive policy's churn come-back wait looks ahead
+    only to the chunk edge) — the price of resume stability.
+    """
+
+    def __init__(self, fault_model: FaultModel, policy: FaultPolicy, key,
+                 problem: HFLProblem, assoc, a, b, delay_model=None,
+                 block: Optional[int] = None):
+        from repro.core import stochastic
+        self.fault_model = dataclasses.replace(fault_model, outage=None)
+        self.policy = policy
+        self.key = stochastic.ensure_key(key)
+        self.problem = problem
+        self.assoc = np.asarray(assoc)
+        self.a, self.b = a, b
+        self.delay_model = delay_model
+        self.block = int(stochastic.CYCLE_BLOCK if block is None else block)
+        if self.block < 1:
+            raise ValueError(f"block must be >= 1, got {block}")
+        self._chunks: dict = {}
+
+    def stats(self, chunk: int) -> FaultyCycles:
+        """The ``block`` cycles of key-offset ``chunk`` (cached)."""
+        chunk = int(chunk)
+        if chunk not in self._chunks:
+            self._chunks[chunk] = faulty_cycle_stats(
+                self.fault_model, self.policy,
+                jax.random.fold_in(self.key, chunk), self.problem,
+                self.assoc, self.a, self.b, self.block,
+                delay_model=self.delay_model)
+            if len(self._chunks) > 8:
+                # Always-on service: the SSP gate bounds how far back a
+                # replay can reach; old chunks are pure re-draws anyway.
+                for c in sorted(self._chunks)[:-4]:
+                    del self._chunks[c]
+        return self._chunks[chunk]
+
+    def cycle_row(self, c: int) -> np.ndarray:
+        """(M,) policy-adjusted cost row of 0-based cycle ``c``."""
+        chunk, off = divmod(int(c), self.block)
+        return self.stats(chunk).cycle_times[off]
+
+    def survivor_row(self, c: int) -> np.ndarray:
+        """(N,) bool UE survivor mask of 0-based cycle ``c``."""
+        chunk, off = divmod(int(c), self.block)
+        return self.stats(chunk).survivors[off]

@@ -400,6 +400,14 @@ class StreamingEdgeAccumulator:
         """Broadcast edge means back to rows: (n,) ids -> (n, F)."""
         return self.edge_means()[jnp.asarray(group_ids, jnp.int32)]
 
+    def reset(self) -> "StreamingEdgeAccumulator":
+        """Zero the accumulator for reuse.  Long-lived consumers (the
+        service's merge queue folds one edge cohort per arrival) keep ONE
+        accumulator alive instead of re-allocating per wave."""
+        self.num = jnp.zeros_like(self.num)
+        self.mass = jnp.zeros_like(self.mass)
+        return self
+
     def resident_bytes(self) -> int:
         """Bytes of persistent accumulator state (independent of N)."""
         return int(self.num.size * 4 + self.mass.size * 4)

@@ -427,10 +427,17 @@ class HFLSimulator:
                 jax.jit(faulty_depart, donate_argnums=donate))
 
     def _fault_survivor_matrix(self, fc):
-        """``fc.survivors`` mapped onto the HOT row layout: (C, N_hot)
-        bool (padding rows are row-0 copies, but they carry zero weight
-        everywhere it matters)."""
-        surv = np.asarray(fc.survivors)
+        """``fc.survivors`` mapped onto the HOT row layout."""
+        return self.hot_survivor_rows(fc.survivors)
+
+    def hot_survivor_rows(self, survivors) -> np.ndarray:
+        """Map ``(C, N)`` bool per-UE survivor masks (original UE order,
+        e.g. ``faults.FaultyCycles.survivors`` rows) onto the HOT row
+        layout: (C, N_hot) bool.  Padding rows are row-0 copies, but they
+        carry zero weight everywhere it matters.  Public so an external
+        driver (the always-on service) can compose per-cycle fault
+        survivors with its own shed/sampling masks on hot rows."""
+        surv = np.asarray(survivors)
         if self._slayout is not None:
             surv = np.asarray(self._slayout.pad_rows(
                 jnp.asarray(surv.T))).T
@@ -562,6 +569,16 @@ class HFLSimulator:
         """Total aggregation weight of edge ``m``'s cohort (float64)."""
         w = np.asarray(self._hot_weights, np.float64)
         return float(w[np.asarray(self._hot_gids) == int(m)].sum())
+
+    def hot_rows(self, idx) -> np.ndarray:
+        """Host copy of the given hot flat-buffer rows: (len(idx), F_hot)
+        f32.  The streaming merge path (``repro.launch.service``) pulls
+        one cohort CHUNK at a time through this, so the control plane
+        never materializes more than a chunk of the buffer at once
+        (``flat_state()`` is the all-rows checkpoint path)."""
+        idx = np.asarray(idx, np.int64)
+        return np.asarray(jax.device_get(self._flat[jnp.asarray(idx)]),
+                          np.float32)
 
     def global_from_vector(self, g):
         """Unravel a cloud vector into the global parameter pytree."""

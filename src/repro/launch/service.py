@@ -45,7 +45,30 @@ engine + flat-buffer simulator into exactly that:
   ``restore_latest`` falls back through older checkpoints if the newest
   is damaged, validates the config echo, and the resumed run reproduces
   the uninterrupted run's event trace exactly and its model to float32
-  re-execution tolerance (<= 1e-6).
+  re-execution tolerance (<= 1e-6).  ``keep_last_k`` compacts the
+  cadence directory after each save (``checkpoint.gc_checkpoints``,
+  delete-newest-last so a crash mid-GC never moves the restore
+  frontier).
+
+* **Live faults (PR 10).**  ``fault_model=`` threads the PR 6 fault
+  layer through the running control plane: per-cycle UE dropout/churn
+  and retry-capped uplink loss are drawn through a key-offset-chunked
+  ``faults.FaultCycleSource`` (policy-adjusted cycle costs price the
+  engine's departures; per-cycle survivor masks compose with the
+  shed/sampling masks under ONE ``survivor_weights`` renormalization —
+  byte-identical per chunk to the batch ``faulty_cycle_stats``
+  semantics, dead-and-shed cohorts contribute exact zero, never NaN).
+  Edge-outage windows are materialized once over a fixed horizon and
+  handed to the engine, which VOIDS in-flight cycles (``fail`` /
+  ``repair`` trace records) and — under the deadline-failover policy —
+  excludes down edges from the SSP staleness floor; a cohort whose
+  survivors all died has its arrival dropped at the cloud
+  (``shed-fault`` records) instead of publishing a zero row; at segment
+  boundaries that fall inside an outage window the orphaned UEs
+  re-associate onto surviving edges via ``assoc.failover`` for delay
+  pricing (``failover`` records).  All fault draws are pure in
+  ``(fault_seed, cycle)``, so crash-resume replays every fault decision
+  bit-identically with nothing extra in the checkpoint.
 
 Minimal lifecycle::
 
@@ -73,16 +96,46 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.checkpoint import (CheckpointError, list_checkpoints, load_pytree,
-                              save_pytree)
+from repro.checkpoint import (CheckpointError, gc_checkpoints,
+                              list_checkpoints, load_pytree, save_pytree)
+from repro.core import assoc as assoc_lib
 from repro.core import delay as delay_lib
-from repro.core import events, stochastic
+from repro.core import events
+from repro.core import faults as faults_lib
+from repro.core import stochastic
 
 #: Service checkpoint + trace schema version (see ``checkpoint.npz``'s
 #: module docstring for the on-disk tree) — bump on any layout change.
-SERVICE_CKPT_VERSION = 1
+#: v2 (PR 10): in-flight fault bookkeeping ("dead" tree) + fault/GC
+#: counters in "svc".
+SERVICE_CKPT_VERSION = 2
 SERVICE_TRACE_SCHEMA = "hfl-service-trace"
-SERVICE_TRACE_VERSION = 1
+#: v2 (PR 10): fault record kinds (fail/repair/shed-fault/failover),
+#: merge records carry their published mass, ckpt records their GC count.
+SERVICE_TRACE_VERSION = 2
+
+#: Every record kind a version-2 service trace may carry — the loader
+#: validates each record against this set, so a foreign/corrupt export
+#: fails loudly instead of silently skipping unknown events.
+SERVICE_TRACE_KINDS = frozenset({
+    "merge",       # one cloud publish (latency/backlog/stale/mass)
+    "shed",        # queued merge dropped by the overload watermark
+    "shed-fault",  # arrival dropped: the cohort's survivors all died
+    "degraded",    # watermark state flip (on=True/False)
+    "fail",        # edge outage opened mid-flight; cycle voided
+    "repair",      # edge back up; the voided cycle re-departed
+    "failover",    # segment-boundary orphan re-association (delay side)
+    "ckpt",        # durable checkpoint written (+ GC count)
+    "resume",      # state restored from a checkpoint
+})
+
+#: Outage windows are wall-clock, so the open-ended service materializes
+#: them ONCE at construction over this many deterministic cycle slots —
+#: pure in ``fault_seed``, hence identical across crash-resumes.  Runs
+#: that outlive the horizon simply see no further outages (dropout/loss
+#: draws are chunked and never run out).
+SERVICE_OUTAGE_HORIZON = 4096
+_OUTAGE_SALT = 0x0FA17     # folds the outage draw off the cycle chunks
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,13 +170,48 @@ class ServiceConfig:
     ue_shed_frac: float = 0.25       # per-cohort UE shed while degraded
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0              # checkpoint cadence in events; 0=off
+    keep_last_k: int = 0             # checkpoint GC: keep newest k; 0=all
     window: int = 64                 # rolling SLO window (latencies)
     sampler: str = ""                # ""=full participation; else a
                                      # repro.fl.sampling registry name
     participation_rate: float = 1.0  # per-edge cohort fraction (0, 1]
     sample_seed: int = 0             # keys the per-cycle cohort draws
+    fault_model: Optional[object] = None    # faults.FaultModel; None=clean
+    fault_policy: Optional[object] = None   # faults.FaultPolicy; None with
+                                            # a fault_model resolves to
+                                            # deadline_failover_policy()
+    fault_seed: int = 0              # keys every fault draw (windows incl.)
+    merge_stream_chunk: int = 0      # >0: stream merge rows through a
+                                     # chunked accumulator; 0=direct row
 
     def __post_init__(self):
+        if self.fault_model is not None:
+            if not isinstance(self.fault_model, faults_lib.FaultModel):
+                raise ValueError(f"fault_model must be a "
+                                 f"repro.core.faults.FaultModel, got "
+                                 f"{type(self.fault_model).__name__}")
+            if self.max_staleness < 1:
+                raise ValueError(
+                    f"fault_model requires max_staleness >= 1 (outage "
+                    f"failover relaxes the SSP staleness floor and the "
+                    f"barrier has none — mirroring simulate_async's "
+                    f"check), got max_staleness={self.max_staleness}")
+            if self.fault_policy is None:
+                object.__setattr__(self, "fault_policy",
+                                   faults_lib.deadline_failover_policy())
+        if self.fault_policy is not None and not isinstance(
+                self.fault_policy, faults_lib.FaultPolicy):
+            raise ValueError(f"fault_policy must be a "
+                             f"repro.core.faults.FaultPolicy, got "
+                             f"{type(self.fault_policy).__name__}")
+        if self.keep_last_k < 0:
+            raise ValueError(f"keep_last_k must be >= 0 (0 keeps every "
+                             f"checkpoint generation), got "
+                             f"{self.keep_last_k}")
+        if self.merge_stream_chunk < 0:
+            raise ValueError(f"merge_stream_chunk must be >= 0 (0 uses "
+                             f"the direct edge-row path), got "
+                             f"{self.merge_stream_chunk}")
         if self.max_staleness < 1:
             raise ValueError("the service needs max_staleness >= 1 (the "
                              "barrier cannot be tightened or relaxed live)")
@@ -154,6 +242,17 @@ class ServiceConfig:
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
         d["segments"] = [list(dataclasses.astuple(s)) for s in self.segments]
+        if self.fault_model is not None:
+            # Tag each fault process with its class: asdict alone would
+            # collapse e.g. BernoulliDropout/MarkovChurn into ambiguous
+            # field dicts and weaken the resume config-echo check.
+            d["fault_model"] = {
+                slot: (None if p is None
+                       else dict(kind=type(p).__name__,
+                                 **dataclasses.asdict(p)))
+                for slot, p in (("dropout", self.fault_model.dropout),
+                                ("loss", self.fault_model.loss),
+                                ("outage", self.fault_model.outage))}
         return json.dumps(d, sort_keys=True)
 
 
@@ -217,6 +316,59 @@ class HFLService:
         self._seg_ends = list(np.cumsum(
             [s.duration for s in config.segments]))
 
+        # -- live fault layer (PR 10) ---------------------------------------
+        # Everything here is PURE in (config, fault_seed): windows, the
+        # per-segment fault sources and the boundary failover associations
+        # are re-derived identically at resume, so none of it is
+        # checkpointed.
+        fm = config.fault_model
+        self._fault_on = fm is not None and not fm.is_null()
+        self._fsrc: List = []
+        self._fsrc_fo: List = []
+        self._fo_active: List = []
+        self._fo_info: List[Optional[dict]] = [None] * len(config.segments)
+        self._windows_full: List[Tuple[int, float, float]] = []
+        eng_outages = None
+        eng_failover = False
+        if self._fault_on:
+            pol = config.fault_policy
+            fkey = stochastic.ensure_key(config.fault_seed)
+            outage = fm.outage or faults_lib.EdgeOutage(0.0)
+            self._windows_full = outage.sample_windows(
+                jax.random.fold_in(fkey, _OUTAGE_SALT), sched.problem,
+                assoc, sched.a, sched.b, SERVICE_OUTAGE_HORIZON)
+            pos_of = {int(m): i for i, m in enumerate(self.active)}
+            eng_outages = [(pos_of[m], f, r)
+                           for m, f, r in self._windows_full if m in pos_of]
+            eng_failover = bool(pol.failover)
+            # Segment-boundary failover: a segment that OPENS while edges
+            # are inside an outage window re-homes their orphaned UEs onto
+            # the survivors (assoc.failover) for DELAY pricing — the
+            # model-side cohorts stay the planned association (the dead
+            # edge's merges are voided/suppressed while it is down).
+            seg_starts = [0.0] + [float(t) for t in self._seg_ends[:-1]]
+            for i, (t0, s) in enumerate(zip(seg_starts, config.segments)):
+                downs = sorted({int(m) for m, f, r in self._windows_full
+                                if f <= t0 < r})
+                model = stochastic.scenario(s.scenario).model
+                ki = jax.random.fold_in(fkey, i)
+                self._fsrc.append(faults_lib.FaultCycleSource(
+                    fm, pol, ki, sched.problem, assoc, sched.a, sched.b,
+                    delay_model=model))
+                if downs and pol.failover and len(downs) < self.M_act:
+                    A_i = assoc_lib.failover(sched.problem, assoc, downs,
+                                             a=sched.a)
+                    orphans = assoc_lib.orphans_of(assoc, downs)
+                    self._fo_info[i] = dict(t=t0, edges=downs,
+                                            orphans=int(orphans.size))
+                    self._fsrc_fo.append(faults_lib.FaultCycleSource(
+                        fm, pol, ki, sched.problem, A_i, sched.a,
+                        sched.b, delay_model=model))
+                    self._fo_active.append(np.asarray(A_i).sum(0) > 0)
+                else:
+                    self._fsrc_fo.append(None)
+                    self._fo_active.append(None)
+
         if config.merge_cost is not None:
             self.merge_cost = float(config.merge_cost)
         else:
@@ -226,7 +378,8 @@ class HFLService:
 
         self.engine = events.AsyncEngine(
             self.M_act, self._cost, quota=None,
-            max_staleness=config.max_staleness)
+            max_staleness=config.max_staleness,
+            outages=eng_outages, failover=eng_failover)
 
         # -- mutable control-plane state (everything a checkpoint holds) --
         self.g = np.asarray(jax.device_get(sim.cloud_vector()),
@@ -245,6 +398,15 @@ class HFLService:
         self.ckpt_wall = 0.0             # seconds spent checkpointing
         self.run_wall = 0.0              # seconds spent in run()
         self._ckpt_count = 0
+        self.fault_shed = 0              # arrivals dropped: cohort all-dead
+        self._dead: Dict[Tuple[int, int], bool] = {}
+        self._seg_announced = 0          # last segment failover-logged
+        self._fsurv_cache: Dict[Tuple[int, int], np.ndarray] = {}
+        self._stream_acc = None
+        if config.merge_stream_chunk > 0:
+            from repro.fl import aggregate as aggregate_lib
+            self._stream_acc = aggregate_lib.StreamingEdgeAccumulator(
+                1, int(self.g.shape[0]))
 
         # Per-cycle client sampling (repro.fl.sampling): a keyed cohort
         # mask per cycle, pure in (sample_seed, cycle) — resume re-derives
@@ -275,10 +437,41 @@ class HFLService:
     def _cost(self, m_eng: int, cycle: int, t: float) -> float:
         """Engine cost callable: scenario draw / load of the segment the
         departure falls in.  Pure in (m_eng, cycle, t) given the config —
-        the property checkpoint/resume determinism rests on."""
+        the property checkpoint/resume determinism rests on.  With a
+        fault model the draw comes from the segment's FaultCycleSource
+        (deadline cuts and retries already priced in); edges the
+        segment's failover association left empty price from the base
+        association (the engine needs a positive cycle time even while
+        their merges are being voided)."""
         i = self._seg_at(t)
-        row = self._sources[i].row(cycle - 1)
-        return float(row[self.active[m_eng]]) / self.config.segments[i].load
+        if self._fault_on:
+            m_full = int(self.active[m_eng])
+            src = self._fsrc[i]
+            fo = self._fsrc_fo[i]
+            if fo is not None and self._fo_active[i][m_full]:
+                src = fo
+            ct = float(src.cycle_row(cycle - 1)[m_full])
+        else:
+            ct = float(self._sources[i].row(cycle - 1)[self.active[m_eng]])
+        return ct / self.config.segments[i].load
+
+    def _fault_survivors(self, t: float, cycle: int) -> np.ndarray:
+        """Hot-row survivor mask for a cycle-``cycle`` departure at ``t``:
+        the segment's keyed FaultCycleSource row mapped onto hot rows.
+        Memoized and evicted like the sampling caches; pure in
+        (fault_seed, segment, cycle), so resume re-derives it exactly."""
+        i = self._seg_at(t)
+        key = (i, int(cycle))
+        got = self._fsurv_cache.get(key)
+        if got is None:
+            src = self._fsrc_fo[i] or self._fsrc[i]
+            row = src.survivor_row(int(cycle) - 1)
+            got = self.sim.hot_survivor_rows(row[None])[0]
+            self._fsurv_cache[key] = got
+            if len(self._fsurv_cache) > 64:
+                for k in sorted(self._fsurv_cache)[:-32]:
+                    del self._fsurv_cache[k]
+        return got
 
     # -- model replay ----------------------------------------------------
 
@@ -349,10 +542,44 @@ class HFLService:
         if not departs:
             return
         gids = np.asarray(self.sim._hot_gids)
+        fault_ok = None
+        if self._fault_on:
+            # Faults are GROUND TRUTH: a churned-out or lossy-dropped UE
+            # cannot be re-added by any downstream mask.  A cohort whose
+            # fault survivors carry zero weight trains nobody this cycle;
+            # its arrival is marked dead and shed at the cloud
+            # (shed-fault) instead of publishing a zero row.
+            w = np.asarray(self.sim._hot_weights, np.float64)
+            fault_ok = np.ones(gids.shape[0], dtype=bool)
+            live: List[Tuple[int, float, int]] = []
+            for m_eng, t, cyc in departs:
+                cohort = gids == int(self.active[m_eng])
+                srow = self._fault_survivors(t, cyc)
+                fault_ok[cohort] = srow[cohort]
+                key = (int(m_eng), int(cyc))
+                if float(w[cohort & fault_ok].sum()) > 0.0:
+                    self._dead.pop(key, None)
+                    live.append((m_eng, t, cyc))
+                else:
+                    self._dead[key] = True
+            departs = live
+            if not departs:
+                return
         cohorts = np.zeros(gids.shape[0], dtype=bool)
         for m_eng, _t, _c in departs:
             cohorts |= gids == int(self.active[m_eng])
         ue_ok = self._shed_mask(cohorts)
+        if fault_ok is not None:
+            if ue_ok is None:
+                ue_ok = fault_ok.copy()
+            else:
+                ue_ok &= fault_ok
+                # The advisory shed can empty a cohort the faults left
+                # alive; fall back to the fault survivors alone there.
+                for m_eng, _t, _c in departs:
+                    cohort = gids == int(self.active[m_eng])
+                    if not (ue_ok & cohort).any():
+                        ue_ok[cohort] = fault_ok[cohort]
         agg_w = None
         if self._sampler is not None:
             part = np.ones(gids.shape[0], dtype=bool)
@@ -362,13 +589,19 @@ class HFLService:
                 part[cohort] = self._participation_mask(cyc)[cohort]
                 agg_w[cohort] = self._ipw_weights(cyc)[cohort]
             combined = part if ue_ok is None else (ue_ok & part)
-            # Shed x sampling can empty a cohort; an empty cohort would
-            # publish a zero row at full mass.  Fall back to the sampled
-            # cohort alone there (sampling outranks the advisory shed).
+            # Shed/sampling composition can empty a cohort; an empty
+            # cohort would publish a zero row at full mass.  Fall back to
+            # the sampled cohort (cut to the fault survivors when there
+            # is a fault layer), then to the fault survivors alone.
             for m_eng, _t, _c in departs:
                 cohort = gids == int(self.active[m_eng])
                 if not (combined & cohort).any():
-                    combined[cohort] = part[cohort]
+                    fallback = part[cohort]
+                    if fault_ok is not None:
+                        fallback = fallback & fault_ok[cohort]
+                        if not fallback.any():
+                            fallback = fault_ok[cohort]
+                    combined[cohort] = fallback
             ue_ok = combined
         g_dev = self.sim.place_cloud_vector(self.g)
         self.sim.replay_departure(g_dev, cohorts, ue_ok=ue_ok,
@@ -392,7 +625,8 @@ class HFLService:
         self.latencies.append(lat)
         self.trace.append(dict(kind="merge", t=finish, edge=job.edge,
                                cycle=job.cycle, stale=int(stale),
-                               latency=lat, backlog=len(self.queue)))
+                               latency=lat, backlog=len(self.queue),
+                               mass=float(job.mass)))
 
     def _drain(self, t: float) -> None:
         """Serve the FIFO queue up to simulated time ``t``: every job
@@ -448,30 +682,92 @@ class HFLService:
         departs: List[Tuple[int, float, int]] = []
         for kind, ev in records:
             if kind == "depart":
-                self._dep_t[(int(ev.edge), int(ev.cycle))] = float(ev.t)
+                key = (int(ev.edge), int(ev.cycle))
+                # First-keep: a cycle voided by an outage re-departs at
+                # repair under the SAME cycle id — its merge latency must
+                # run from the ORIGINAL dispatch (window + redo priced in).
+                if key not in self._dep_t:
+                    self._dep_t[key] = float(ev.t)
                 departs.append((int(ev.edge), float(ev.t), int(ev.cycle)))
                 self.clock = max(self.clock, float(ev.t))
+            elif kind == "fail":
+                self.trace.append(dict(
+                    kind="fail", t=float(ev.t),
+                    edge=int(self.active[int(ev.edge)]),
+                    cycle=int(ev.cycle)))
+                self.clock = max(self.clock, float(ev.t))
+            elif kind == "repair":
+                self.trace.append(dict(
+                    kind="repair", t=float(ev.t),
+                    edge=int(self.active[int(ev.edge)])))
             elif kind == "update":
                 t = float(ev.t)
                 self._drain(t)
                 for m_eng, c, s in ev.merges:
                     m_full = int(self.active[m_eng])
-                    row = np.asarray(
-                        jax.device_get(self.sim.edge_mean_row(m_full)),
-                        np.float32)
+                    dkey = (int(m_eng), int(c))
+                    if self._dead.pop(dkey, False):
+                        # The whole cohort was fault-dead at departure:
+                        # the arrival carries zero survivor mass, so it
+                        # is dropped at the cloud instead of published.
+                        self._dep_t.pop(dkey, None)
+                        self.fault_shed += 1
+                        self.trace.append(dict(
+                            kind="shed-fault", t=t, edge=m_full,
+                            cycle=int(c)))
+                        continue
                     self.queue.append(_Job(
                         t_arr=t,
-                        t_dep=self._dep_t.pop((int(m_eng), int(c))),
+                        t_dep=self._dep_t.pop(dkey),
                         edge=m_full, cycle=int(c), stale=int(s),
                         applied_at_arr=self.applied,
-                        mass=self.sim.edge_mass(m_full), row=row))
+                        mass=self.sim.edge_mass(m_full),
+                        row=self._merge_row(m_full)))
                 self.backlog_seen.append(len(self.queue))
                 self._update_watermarks(t)
                 self.clock = max(self.clock, t)
                 self.events_done += 1
+        self._announce_segments()
         if departs:
             self._drain(max(t for _, t, _ in departs))
             self._replay_wave(departs)
+
+    def _merge_row(self, m_full: int) -> np.ndarray:
+        """The merge payload: edge ``m_full``'s weighted cohort mean (one
+        broadcast row).  With ``merge_stream_chunk > 0`` the cohort's
+        rows fold through the persistent streaming accumulator chunk by
+        chunk instead — O(chunk * F) resident regardless of cohort size,
+        bitwise-stable across resumes, parity <= 1e-5 with the direct
+        read."""
+        chunk = self.config.merge_stream_chunk
+        if chunk <= 0:
+            return np.asarray(
+                jax.device_get(self.sim.edge_mean_row(m_full)), np.float32)
+        gids = np.asarray(self.sim._hot_gids)
+        w = np.asarray(self.sim._hot_weights, np.float64)
+        idx = np.flatnonzero(gids == int(m_full))
+        acc = self._stream_acc.reset()
+        for s in range(0, idx.size, chunk):
+            sel = idx[s:s + chunk]
+            acc.add(self.sim.hot_rows(sel), w[sel],
+                    np.zeros(sel.size, np.int32))
+        return np.asarray(jax.device_get(acc.edge_means()[0]), np.float32)
+
+    def _announce_segments(self) -> None:
+        """Emit one ``failover`` trace record the first time the clock
+        enters a segment whose boundary re-homed orphans (idempotent
+        across resumes: the watermark is checkpointed)."""
+        if not self._fault_on:
+            return
+        seg_now = self._seg_at(self.clock)
+        while self._seg_announced < seg_now:
+            self._seg_announced += 1
+            info = self._fo_info[self._seg_announced]
+            if info is not None:
+                self.trace.append(dict(
+                    kind="failover", t=float(info["t"]),
+                    seg=self._seg_announced, edges=list(info["edges"]),
+                    orphans=int(info["orphans"])))
 
     def run(self, max_updates: int, verbose: bool = False) -> dict:
         """Process engine events until ``events_done`` reaches
@@ -516,7 +812,7 @@ class HFLService:
         total = self.applied + self.shed_jobs
         return dict(
             events=self.events_done, applied=self.applied,
-            shed=self.shed_jobs,
+            shed=self.shed_jobs, fault_shed=self.fault_shed,
             shed_frac=self.shed_jobs / total if total else 0.0,
             makespan=self.clock,
             p50=float(np.percentile(lat, 50)) if lat.size else 0.0,
@@ -578,12 +874,20 @@ class HFLService:
                                     np.int64),
                 "t": np.asarray(list(self._dep_t.values()), np.float64),
             },
+            "dead": {
+                "edge": np.asarray([e for e, _ in self._dead],
+                                   np.int64),
+                "cycle": np.asarray([c for _, c in self._dead],
+                                    np.int64),
+            },
             "svc": {
                 "busy_until": np.float64(self.busy_until),
                 "clock": np.float64(self.clock),
                 "events_done": np.int64(self.events_done),
                 "applied": np.int64(self.applied),
                 "shed_jobs": np.int64(self.shed_jobs),
+                "fault_shed": np.int64(self.fault_shed),
+                "seg_announced": np.int64(self._seg_announced),
                 "degraded": np.int64(self.degraded),
                 "ckpt_count": np.int64(self._ckpt_count),
             },
@@ -606,10 +910,14 @@ class HFLService:
             "schema": SERVICE_CKPT_VERSION,
             "config": self.config.to_json(),
         })
+        gc_n = 0
+        if self.config.keep_last_k > 0:
+            gc_n = len(gc_checkpoints(self.config.ckpt_dir,
+                                      self.config.keep_last_k))
         dt = time.perf_counter() - t0
         self.ckpt_wall += dt
         self.trace.append(dict(kind="ckpt", t=self.clock,
-                               n=self._ckpt_count, wall=dt))
+                               n=self._ckpt_count, wall=dt, gc=gc_n))
         return out
 
     def _restore_tree(self, tree: dict, meta: dict) -> None:
@@ -643,12 +951,19 @@ class HFLService:
             for e, c, t in zip(np.asarray(d["edge"]),
                                np.asarray(d["cycle"]),
                                np.asarray(d["t"]))}
+        dd = tree["dead"]
+        self._dead = {
+            (int(e), int(c)): True
+            for e, c in zip(np.asarray(dd["edge"]),
+                            np.asarray(dd["cycle"]))}
         svc = tree["svc"]
         self.busy_until = float(np.asarray(svc["busy_until"]))
         self.clock = float(np.asarray(svc["clock"]))
         self.events_done = int(np.asarray(svc["events_done"]))
         self.applied = int(np.asarray(svc["applied"]))
         self.shed_jobs = int(np.asarray(svc["shed_jobs"]))
+        self.fault_shed = int(np.asarray(svc["fault_shed"]))
+        self._seg_announced = int(np.asarray(svc["seg_announced"]))
         self.degraded = bool(int(np.asarray(svc["degraded"])))
         self._ckpt_count = int(np.asarray(svc["ckpt_count"]))
         m = tree["metrics"]
@@ -706,6 +1021,13 @@ def load_service_trace_jsonl(path: str) -> Tuple[dict, List[dict]]:
         raise ValueError(f"{path}: truncated trace — header promises "
                          f"{header.get('num_records')} records, file "
                          f"holds {len(records)}")
+    for i, rec in enumerate(records):
+        kind = rec.get("kind")
+        if kind not in SERVICE_TRACE_KINDS:
+            raise ValueError(
+                f"{path}: record {i} has unknown kind {kind!r}; "
+                f"version {SERVICE_TRACE_VERSION} records are one of "
+                f"{sorted(SERVICE_TRACE_KINDS)}")
     return header, records
 
 
@@ -769,16 +1091,45 @@ def main(argv=None) -> dict:
                     help="restore the newest valid checkpoint first")
     ap.add_argument("--no-shed", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault-scenario", default="",
+                    help="inject this registry scenario's fault model "
+                         "(e.g. ue_churn, edge_outage, lossy_uplink)")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--wait-for-all", action="store_true",
+                    help="unprotected fault policy: no deadline, no "
+                         "retries, no failover (the naive baseline)")
+    ap.add_argument("--keep-last-k", type=int, default=0,
+                    help="GC all but the newest k checkpoints after "
+                         "each save (0 keeps everything)")
+    ap.add_argument("--stream-chunk", type=int, default=0,
+                    help="fold merge payloads through the streaming "
+                         "accumulator in chunks of this many rows")
     ap.add_argument("--out", default=None, help="summary JSON path")
     ap.add_argument("--trace", default=None, help="trace JSONL path")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
+    fault_model = None
+    fault_policy = None
+    if args.fault_scenario:
+        fault_model = stochastic.scenario(args.fault_scenario).faults
+        if fault_model is None:
+            raise SystemExit(
+                f"scenario {args.fault_scenario!r} carries no fault "
+                f"model; pick a fault scenario (ue_churn, edge_outage, "
+                f"lossy_uplink)")
+        if args.wait_for_all:
+            fault_policy = faults_lib.wait_for_all_policy()
     cfg = ServiceConfig(segments=_parse_segments(args.segments),
                         max_staleness=args.max_staleness,
                         delay_seed=args.seed, shed=not args.no_shed,
                         ckpt_dir=args.ckpt_dir,
-                        ckpt_every=args.ckpt_every if args.ckpt_dir else 0)
+                        ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+                        keep_last_k=args.keep_last_k,
+                        fault_model=fault_model,
+                        fault_policy=fault_policy,
+                        fault_seed=args.fault_seed,
+                        merge_stream_chunk=args.stream_chunk)
     sim = default_service_sim(args.ues, args.edges,
                               max_staleness=args.max_staleness,
                               seed=args.seed)

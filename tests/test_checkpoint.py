@@ -10,8 +10,9 @@ import textwrap
 import numpy as np
 import pytest
 
-from repro.checkpoint import (CheckpointError, latest_checkpoint,
-                              list_checkpoints, load_pytree, save_pytree)
+from repro.checkpoint import (CheckpointError, gc_checkpoints,
+                              latest_checkpoint, list_checkpoints,
+                              load_pytree, save_pytree)
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -79,6 +80,80 @@ def test_cadence_discovery_numeric_order(tmp_path):
     assert [os.path.basename(p) for p in
             list_checkpoints(d, prefix="other-")] == ["other-3.npz"]
     assert latest_checkpoint(str(tmp_path / "missing")) is None
+
+
+def _seed_ckpts(d, ns):
+    for n in ns:
+        save_pytree(os.path.join(d, f"ckpt-{n}"), {"n": np.asarray(n)})
+
+
+def test_gc_keeps_newest_k(tmp_path):
+    d = str(tmp_path)
+    _seed_ckpts(d, (1, 2, 3, 10, 11))
+    deleted = gc_checkpoints(d, 2)
+    assert [os.path.basename(p) for p in deleted] == \
+        ["ckpt-1.npz", "ckpt-2.npz", "ckpt-3.npz"]
+    assert [os.path.basename(p) for p in list_checkpoints(d)] == \
+        ["ckpt-10.npz", "ckpt-11.npz"]
+    # idempotent: nothing left to collect
+    assert gc_checkpoints(d, 2) == []
+
+
+def test_gc_validates_keep_last_k(tmp_path):
+    _seed_ckpts(str(tmp_path), (1,))
+    with pytest.raises(ValueError, match="keep_last_k"):
+        gc_checkpoints(str(tmp_path), 0)
+    # k larger than the population deletes nothing
+    assert gc_checkpoints(str(tmp_path), 5) == []
+
+
+def test_gc_tolerates_racing_deletes(tmp_path, monkeypatch):
+    d = str(tmp_path)
+    _seed_ckpts(d, (1, 2, 3))
+    real_remove = os.remove
+
+    def flaky(path):        # victim vanished under us (concurrent GC)
+        if path.endswith("ckpt-1.npz"):
+            real_remove(path)
+            raise FileNotFoundError(path)
+        real_remove(path)
+
+    monkeypatch.setattr(os, "remove", flaky)
+    deleted = gc_checkpoints(d, 1)
+    # ckpt-1 raced (not reported) but GC pressed on to ckpt-2
+    assert [os.path.basename(p) for p in deleted] == ["ckpt-2.npz"]
+    assert [os.path.basename(p) for p in list_checkpoints(d)] == \
+        ["ckpt-3.npz"]
+
+
+def test_crash_mid_gc_leaves_restorable_prefix(tmp_path, monkeypatch):
+    """GC deletes oldest-first, so a crash after ANY number of unlinks
+    leaves the surviving files a contiguous NEWEST suffix — the restore
+    frontier (latest_checkpoint) never moves backwards."""
+    gens = (1, 2, 3, 4, 5)
+    for crash_after in range(3):            # die after j successful unlinks
+        d = str(tmp_path / f"run{crash_after}")
+        os.makedirs(d)
+        _seed_ckpts(d, gens)
+        real_remove = os.remove
+        calls = {"n": 0}
+
+        def dying(path, _j=crash_after):
+            if calls["n"] >= _j:
+                raise KeyboardInterrupt("SIGKILL stand-in mid-GC")
+            calls["n"] += 1
+            real_remove(path)
+
+        monkeypatch.setattr(os, "remove", dying)
+        with pytest.raises(KeyboardInterrupt):
+            gc_checkpoints(d, 2)
+        monkeypatch.setattr(os, "remove", real_remove)
+        left = [os.path.basename(p) for p in list_checkpoints(d)]
+        # survivors are exactly the newest len(left) generations
+        assert left == [f"ckpt-{n}.npz" for n in gens[crash_after:]]
+        assert os.path.basename(latest_checkpoint(d)) == "ckpt-5.npz"
+        tree, _ = load_pytree(latest_checkpoint(d))
+        assert int(tree["n"]) == 5
 
 
 SHARDED_RESTORE_SCRIPT = textwrap.dedent("""
